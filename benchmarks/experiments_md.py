@@ -1,0 +1,211 @@
+"""Generate EXPERIMENTS.md from dry-run artifacts + benchmark results +
+the perf-iteration log (results/perf_log.json, appended by the §Perf
+hillclimbs)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.roofline_table import load_all
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+PERF_LOG = os.path.join(ROOT, "results", "perf_log.json")
+OUT = os.path.join(ROOT, "EXPERIMENTS.md")
+
+
+def _fmt(r):
+    t = r["roofline"]
+    m = r["memory"]["peak_bytes_per_device"] / 2**30
+    fit = "ok" if m <= 16 else f"**OVER {m:.0f}G**"
+    extra = f" n_micro={r['n_micro']}" if r.get("n_micro") else ""
+    return (f"| {r['arch']} | {r['shape']} | {r['quant']}{extra} | "
+            f"{t['compute_s']:.4f} | {t['memory_s']:.4f} | "
+            f"{t['collective_s']:.4f} | **{t['dominant'].replace('_s', '')}**"
+            f" | {r['useful_flops_ratio']:.2f} | {m:.1f} | {fit} |")
+
+
+_FIX_HINTS = {
+    ("memory", "prefill"): "raise attention q-chunk (cuts K/V re-reads) "
+                           "and/or W4A8 weights (halve weight traffic)",
+    ("memory", "train"): "fewer microbatches / larger per-step batch raises "
+                         "arithmetic intensity; quantized grads cut traffic",
+    ("memory", "decode"): "int8 KV cache halves cache traffic; W4A8 halves "
+                          "weight reads",
+    ("collective", "decode"): "weight-stationary (ws) sharding removes "
+                              "per-layer FSDP weight all-gathers",
+    ("collective", "train"): "drop n_micro (re-gathers weights per micro); "
+                             "int8 gradient all-reduce across pods",
+    ("collective", "prefill"): "2D->1D resharding of activations; batch "
+                               "bigger per-gather",
+    ("compute", "prefill"): "near roofline — int8 GEMMs already 2x bf16",
+    ("compute", "train"): "near roofline — remat policy tuning next",
+    ("compute", "decode"): "compute-minor at decode; expected",
+}
+
+
+def hint(r):
+    return _FIX_HINTS.get((r["roofline"]["dominant"].replace("_s", ""),
+                           r["kind"]), "")
+
+
+def _dedupe(recs):
+    seen, out = set(), []
+    for r in recs:
+        key = (r.get("arch"), r.get("shape"), r.get("mesh"), r.get("quant"),
+               r.get("kv_bits"))
+        if key in seen:
+            continue
+        seen.add(key)
+        out.append(r)
+    return out
+
+
+def dryrun_section(recs):
+    ok = _dedupe([r for r in recs
+                  if r.get("status") == "ok" and not r.get("tag")])
+    skipped = [r for r in recs if r.get("status") == "skipped"]
+    errors = [r for r in recs if r.get("status") == "error"]
+    single = [r for r in ok if r["mesh"] == "16x16"]
+    multi = [r for r in ok if r["mesh"] == "2x16x16"]
+    lines = ["## §Dry-run", ""]
+    lines.append(f"- cells compiled OK: **{len(ok)}** "
+                 f"({len(single)} single-pod 16x16, {len(multi)} multi-pod "
+                 f"2x16x16); skipped per assignment rule: "
+                 f"{len(skipped) // 1}; errors: {len(errors)}")
+    lines.append("- every compile records `memory_analysis()` "
+                 "(bytes/device — the fits-HBM proof), loop-corrected HLO "
+                 "FLOPs/bytes (see roofline/hlo_cost.py: XLA cost_analysis "
+                 "counts scan bodies once; the walker multiplies by "
+                 "known_trip_count), and the collective schedule "
+                 "(op x operand bytes x replica-group, ring-adjusted).")
+    lines.append("- artifacts: `results/dryrun/*.json` "
+                 "(one per arch x shape x mesh x quant).")
+    if errors:
+        lines.append("")
+        lines.append("### Errors")
+        for r in errors:
+            lines.append(f"- {r['arch']} x {r['shape']} ({r['mesh']}): "
+                         f"{r['error']}")
+    # memory proof table (multi-pod)
+    lines += ["", "### Multi-pod (2x16x16 = 512 chips) memory proof", "",
+              "| arch | shape | quant | GiB/device | fits 16G HBM |",
+              "|---|---|---|---|---|"]
+    for r in sorted(multi, key=lambda r: (r["arch"], r["shape"])):
+        m = r["memory"]["peak_bytes_per_device"] / 2**30
+        lines.append(f"| {r['arch']} | {r['shape']} | {r['quant']} | "
+                     f"{m:.2f} | {'yes' if m <= 16 else '**NO**'} |")
+    return "\n".join(lines)
+
+
+def roofline_section(recs):
+    ok = _dedupe([r for r in recs
+                  if r.get("status") == "ok" and not r.get("tag")
+                  and r["mesh"] == "16x16"])
+    lines = ["## §Roofline (single-pod 16x16 = 256 chips, per step)", ""]
+    lines.append("Terms in seconds from the v5e model (197 TF/s bf16, "
+                 "394 TOP/s int8, 819 GB/s HBM, 50 GB/s/link ICI); "
+                 "`useful` = MODEL_FLOPS / HLO_FLOPs "
+                 "(6·N·D train, 2·N·D prefill/decode; N_active for MoE).")
+    lines += ["",
+              "| arch | shape | quant | compute_s | memory_s | collective_s"
+              " | dominant | useful | GiB/dev | fits |",
+              "|---|---|---|---|---|---|---|---|---|---|"]
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2,
+             "long_500k": 3}
+    for r in sorted(ok, key=lambda r: (r["arch"], order[r["shape"]])):
+        lines.append(_fmt(r))
+    caveats = ("Reading caveats: (1) the walker counts GEMM FLOPs only, so `useful` can exceed 1 for tiny models whose parameter count is embedding-dominated (xlstm decode). (2) CPU-backend lowering emulates bf16 compute in f32 - activation-collective and score-chain bytes are ~2x what the same module moves on TPU (bf16-native reduces); terms are conservative upper bounds. (3) llama32_vision_90b x decode_32k runs with the int8 KV cache (kv8): the bf16 cache does not fit HBM at 128 x 32k (beyond-paper W8A8KV8).")
+    lines += ["", caveats]
+    lines += ["", "### Dominant-term notes (what moves it down)", ""]
+    seen = set()
+    for r in sorted(ok, key=lambda r: (r["arch"], order[r["shape"]])):
+        h = hint(r)
+        key = (r["arch"], r["shape"])
+        if h and key not in seen:
+            seen.add(key)
+            lines.append(f"- **{r['arch']} x {r['shape']}** "
+                         f"({r['roofline']['dominant'].replace('_s','')}-"
+                         f"bound): {h}")
+    return "\n".join(lines)
+
+
+def perf_section():
+    lines = ["## §Perf — hillclimbing log (hypothesis -> change -> "
+             "before -> after)", ""]
+    if not os.path.exists(PERF_LOG):
+        lines.append("(pending)")
+        return "\n".join(lines)
+    with open(PERF_LOG) as f:
+        log = json.load(f)
+    for cell in log:
+        lines.append(f"### {cell['cell']} — {cell['why']}")
+        lines.append("")
+        base = cell["baseline"]
+        lines.append(f"Baseline ({base['config']}): compute {base['compute_s']:.4f}s, "
+                     f"memory {base['memory_s']:.4f}s, collective "
+                     f"{base['collective_s']:.4f}s -> bound "
+                     f"{base['bound_s']:.4f}s (dominant: {base['dominant']})")
+        lines.append("")
+        lines.append("| # | hypothesis | change | before (dom term) | "
+                     "after | verdict |")
+        lines.append("|---|---|---|---|---|---|")
+        for i, it in enumerate(cell["iterations"], 1):
+            lines.append(f"| {i} | {it['hypothesis']} | {it['change']} | "
+                         f"{it['before_s']:.4f}s | {it['after_s']:.4f}s | "
+                         f"{it['verdict']} |")
+        lines.append("")
+        fin = cell["final"]
+        lines.append(f"**Result**: bound {base['bound_s']:.4f}s -> "
+                     f"{fin['bound_s']:.4f}s "
+                     f"({base['bound_s'] / fin['bound_s']:.2f}x); "
+                     f"{fin['note']}")
+        lines.append("")
+    return "\n".join(lines)
+
+
+def bench_section():
+    path = os.path.join(ROOT, "bench_output.txt")
+    lines = ["## Paper-claim validation (benchmarks/run.py)", ""]
+    if os.path.exists(path):
+        picked = [l.strip() for l in open(path)
+                  if ("claim" in l or "retention" in l or "speedup" in l
+                      or "mem_saving" in l)]
+        lines.append("```")
+        lines += picked
+        lines.append("```")
+    else:
+        lines.append("(run `PYTHONPATH=src python -m benchmarks.run` — "
+                     "see bench_output.txt)")
+    lines.append("")
+    lines.append("Full CSV: `bench_output.txt`; per-table mapping in "
+                 "DESIGN.md §7.")
+    return "\n".join(lines)
+
+
+HEADER = """# EXPERIMENTS
+
+Reproduction + deployment study of *Post-Training Quantization of OpenPangu
+Models for Efficient Deployment on Atlas A2* on the TPU-v5e production mesh
+(DESIGN.md has the paper->system mapping).
+
+- **Dry-run**: every (architecture x input-shape) cell AOT-compiled
+  (.lower().compile()) on BOTH production meshes.
+- **Roofline**: three-term model from compiled artifacts, loop-corrected.
+- **Perf**: hillclimb log on the three selected cells
+  (paper-faithful baseline first, beyond-paper second — both recorded).
+"""
+
+
+def main(print_rows=False):
+    recs = load_all()
+    doc = "\n\n".join([HEADER, dryrun_section(recs), roofline_section(recs),
+                       perf_section(), bench_section()])
+    with open(OUT, "w") as f:
+        f.write(doc + "\n")
+    print(f"# wrote {OUT} ({len(recs)} dry-run records)")
+    return []
+
+
+if __name__ == "__main__":
+    main()

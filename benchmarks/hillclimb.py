@@ -1,0 +1,281 @@
+"""§Perf hillclimbing driver: hypothesis -> change -> re-lower -> measure.
+
+Three selected cells (from the baseline roofline table):
+  * glm4-9b x prefill_32k      — most representative of the paper's
+    technique (7B-class quantized prefill, Table 3's setting); memory-bound.
+  * mixtral-8x22b x decode_32k — most collective-bound (FSDP weight gathers
+    dwarf decode compute by ~1000x).
+  * llama-3.2-vision-90b x train_4k — worst roofline fraction of the big
+    cells; collective-bound (microbatched FSDP re-gathers).
+
+Each iteration is a dryrun variant (flags/env) compiled fresh; results are
+appended to results/perf_log.json which experiments_md.py renders into
+EXPERIMENTS.md §Perf. Stop rule: 3 consecutive <5% improvements on the
+dominant term.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+RESULTS = os.path.join(ROOT, "results", "dryrun")
+PERF_LOG = os.path.join(ROOT, "results", "perf_log.json")
+
+
+def run_variant(arch, shape, tag, *, quant="int8", strategy="fsdp_tp",
+                kv_bits=16, n_micro=0, env=None):
+    """Compile one variant; returns the result dict."""
+    mesh = "16x16"
+    fname = (f"{arch}__{shape}__{mesh}__{quant}__{strategy}__kv{kv_bits}"
+             + (f"__{tag}" if tag else "") + ".json")
+    path = os.path.join(RESULTS, fname)
+    if not os.path.exists(path):
+        cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+               "--shape", shape, "--quant", quant, "--strategy", strategy,
+               "--kv-bits", str(kv_bits), "--n-micro", str(n_micro)]
+        if tag:
+            cmd += ["--tag", tag]
+        e = {**os.environ, "PYTHONPATH": os.path.join(ROOT, "src")}
+        e.update(env or {})
+        r = subprocess.run(cmd, capture_output=True, text=True, env=e)
+        if r.returncode != 0:
+            raise RuntimeError(f"variant {tag} failed:\n{r.stdout[-1500:]}")
+    with open(path) as f:
+        return json.load(f)
+
+
+def _terms(res):
+    t = res["roofline"]
+    return {"compute_s": t["compute_s"], "memory_s": t["memory_s"],
+            "collective_s": t["collective_s"], "dominant": t["dominant"],
+            "bound_s": t["step_s_lower_bound"],
+            "gib": res["memory"]["peak_bytes_per_device"] / 2**30}
+
+
+def climb(cell_cfg):
+    """Run baseline + iterations; returns the perf-log entry."""
+    arch, shape = cell_cfg["arch"], cell_cfg["shape"]
+    base = run_variant(arch, shape, "", **cell_cfg.get("base_kw", {}))
+    bt = _terms(base)
+    print(f"[perf] {arch} x {shape} baseline: {bt}")
+    entry = {"cell": f"{arch} x {shape} (16x16)", "why": cell_cfg["why"],
+             "baseline": {"config": cell_cfg.get("base_desc",
+                                                 "int8, fsdp_tp"), **bt},
+             "iterations": []}
+    best = dict(bt)
+    best_kw = dict(cell_cfg.get("base_kw", {}))
+    misses = 0
+    for it in cell_cfg["iterations"]:
+        if misses >= 3:
+            print(f"[perf] stop rule: 3 consecutive <5% improvements")
+            break
+        kw = {**best_kw, **it.get("kw", {})} if it.get("cumulative", True) \
+            else {**cell_cfg.get("base_kw", {}), **it.get("kw", {})}
+        env = {**(best_kw.pop("env", {}) if False else {}),
+               **it.get("env", {})}
+        if it.get("cumulative", True) and "env" in best_kw:
+            env = {**best_kw["env"], **env}
+        kw["env"] = env
+        res = run_variant(arch, shape, it["tag"], **kw)
+        at = _terms(res)
+        dom = bt["dominant"]
+        before = best[dom]
+        after = at[dom]
+        improved = after < before * 0.95 and at["gib"] <= 16.5
+        verdict = ("confirmed" if improved and it["expect_improve"] else
+                   "refuted" if not improved and it["expect_improve"] else
+                   "expected-neutral" if not improved else "surprise-win")
+        entry["iterations"].append({
+            "hypothesis": it["hypothesis"], "change": it["change"],
+            "before_s": before, "after_s": after, "verdict": verdict,
+            "terms": at})
+        print(f"[perf] {it['tag']}: {dom} {before:.4f} -> {after:.4f} "
+              f"({verdict}); gib={at['gib']:.1f}")
+        if improved:
+            best, best_kw, misses = at, kw, 0
+        else:
+            misses += 1
+    entry["final"] = {"bound_s": best["bound_s"],
+                      "note": cell_cfg.get("final_note", "")}
+    return entry
+
+
+CELLS = [
+    {
+        "arch": "glm4_9b", "shape": "prefill_32k",
+        "why": ("most representative of the paper's technique: 7B-class "
+                "INT8 prefill (Table 3's setting); baseline memory-bound "
+                "on chunked-attention K/V re-reads"),
+        "base_desc": "int8, fsdp_tp, q-chunk 128 (score budget 2^31)",
+        "iterations": [
+            {"tag": "chunk512", "expect_improve": True,
+             "hypothesis": ("memory term is dominated by per-q-chunk K/V "
+                            "re-reads (nc=256 chunks re-stream 32k keys "
+                            "x28 layers); 4x bigger chunks cut re-reads "
+                            "~4x on the attention share"),
+             "change": "attention score budget 2^31 -> 2^33 (q-chunk 512)",
+             "env": {"REPRO_SCORE_BUDGET_LOG2": "33"}},
+            {"tag": "grouped", "expect_improve": True,
+             "hypothesis": ("GQA repeat materializes 32-head K from the "
+                            "2-head cache inside every chunk (16x K-read "
+                            "inflation); the grouped einsum keeps K at 2 "
+                            "heads (glm4's per-group head dim 16 still "
+                            "shards)"),
+             "change": "grouped-GQA score einsum (REPRO_GQA_GROUPED=1)",
+             "env": {"REPRO_GQA_GROUPED": "1"}},
+            {"tag": "w4a8", "expect_improve": False,
+             "hypothesis": ("weights are 9.4 GB int8 vs TBs of attention "
+                            "traffic at 32k: halving weight reads moves "
+                            "the memory term <5%"),
+             "change": "W4A8 weights (per-group int4)",
+             "kw": {"quant": "w4a8"}},
+            {"tag": "chunk2k", "expect_improve": True,
+             "hypothesis": "another 4x chunk size, 4x fewer K re-reads",
+             "change": "score budget 2^35 (q-chunk 2048)",
+             "env": {"REPRO_SCORE_BUDGET_LOG2": "35"}},
+            {"tag": "bf16scores", "expect_improve": True,
+             "hypothesis": ("top_bytes shows 4.5 TB/dev of f32 score-chain "
+                            "HBM round-trips (the thing a flash kernel "
+                            "keeps in VMEM); bf16 score storage halves it"),
+             "change": "REPRO_SCORES_BF16=1 (+q-chunk 2048)",
+             "env": {"REPRO_SCORES_BF16": "1"}},
+        ],
+        "final_note": ("9.6s -> top_bytes attribution: 4.5 TB/dev of f32 "
+                       "score-chain HBM round-trips — exactly what a fused "
+                       "flash kernel keeps in VMEM. Analytic flash bound: "
+                       "K/V streams only = nc x T x kv x hd x 40L = 0.9s "
+                       "-> compute-bound at 0.59s (63% of int8 roofline). "
+                       "bf16-score storage is unmeasurable on CPU-lowered "
+                       "HLO (softmax upcasts regardless)"),
+    },
+    {
+        "arch": "mixtral_8x22b", "shape": "decode_32k",
+        "why": ("most collective-bound cell: per-layer FSDP gathers of "
+                "int8 expert weights dwarf the 1-token decode compute "
+                "by ~1500x"),
+        "base_desc": "int8, fsdp_tp (2-D weight sharding, gather per layer)",
+        "iterations": [
+            {"tag": "ws", "expect_improve": True,
+             "hypothesis": ("decode moves whole expert weights over ICI "
+                            "every layer; weight-stationary sharding over "
+                            "the combined 256-way axis keeps weights "
+                            "resident (141 GB int8 / 256 = 0.55 GB/dev) "
+                            "and all-reduces tiny (B,1,d) activations "
+                            "instead"),
+             "change": "--strategy ws (weight-stationary serving layout)",
+             "kw": {"strategy": "ws"}},
+            {"tag": "kv8", "expect_improve": True,
+             "hypothesis": ("with gathers gone, the rolling SWA cache "
+                            "(4096-slot) read dominates memory; int8 KV "
+                            "halves it"),
+             "change": "int8 KV cache (W8A8KV8)",
+             "kw": {"kv_bits": 8}},
+            {"tag": "w4a8", "expect_improve": True,
+             "hypothesis": ("decode is weight-read bound per token; int4 "
+                            "weights halve resident-weight traffic"),
+             "change": "W4A8 weights",
+             "kw": {"quant": "w4a8"}},
+            {"tag": "ws2", "expect_improve": True,
+             "hypothesis": ("the surviving 0.085s is an s8 wo all-gather "
+                            "x56 (ws K-shards OUT matrices -> XLA gathers "
+                            "them) + s32 expert-accum reduces; N-sharding "
+                            "OUT matrices (ws2) keeps every weight "
+                            "stationary and reduces only (B,1,d) "
+                            "activations"),
+             "change": "--strategy ws2 (N-sharded OUT matrices)",
+             "kw": {"strategy": "ws2"}},
+        ],
+        "final_note": ("3.4x: weight-stationary + int8 KV is the "
+                       "deployment layout; ws2 (N-sharded OUT) and w4a8 "
+                       "both refuted — the residual 0.085s is the wo "
+                       "gather + s32 expert-accum reduces, whose fix is "
+                       "reduce-in-bf16 + gather/compute overlap"),
+    },
+    {
+        "arch": "llama32_vision_90b", "shape": "train_4k",
+        "why": ("worst roofline fraction among the large cells; "
+                "collective-bound: n_micro=8 gradient accumulation "
+                "re-gathers FSDP weights every microbatch"),
+        "base_desc": "bf16, fsdp_tp, n_micro=8 (auto)",
+        "iterations": [
+            {"tag": "bf16params", "expect_improve": True,
+             "cumulative": False,
+             "hypothesis": ("the dominant collectives are f32 grad/act "
+                            "all-reduces; bf16 parameter storage (f32 "
+                            "AdamW moments kept) halves every dw reduce "
+                            "and weight gather byte"),
+             "change": "REPRO_PARAM_DTYPE=bf16 (mixed-precision training)",
+             "env": {"REPRO_PARAM_DTYPE": "bf16"}},
+            {"tag": "bf16sc", "expect_improve": True, "cumulative": False,
+             "hypothesis": ("top collectives are activation/grad-shaped f32 "
+                            "dp all-reduces x160 (600+ GiB) — per-token "
+                            "traffic; f32 score/act precision is the "
+                            "multiplier to attack, not n_micro"),
+             "change": "chunk 2^35 + bf16 scores",
+             "env": {"REPRO_SCORE_BUDGET_LOG2": "35",
+                     "REPRO_SCORES_BF16": "1"}},
+            {"tag": "seqshard", "expect_improve": True, "cumulative": False,
+             "hypothesis": ("sequence-parallel boundary sharding "
+                            "(Megatron-SP: S over model at layer "
+                            "boundaries) re-routes the f32 residual "
+                            "all-reduces to smaller reshards"),
+             "change": "REPRO_ACT_SPEC=seq (+chunk 2^35, bf16 scores)",
+             "env": {"REPRO_ACT_SPEC": "seq",
+                     "REPRO_SCORE_BUDGET_LOG2": "35",
+                     "REPRO_SCORES_BF16": "1"}},
+            {"tag": "nmicro4", "expect_improve": True,
+             "hypothesis": ("weight all-gathers scale with n_micro; "
+                            "halving it halves the collective term if "
+                            "activations still fit (15.8 -> ~20 GiB risk)"),
+             "change": "--n-micro 4",
+             "kw": {"n_micro": 4}},
+            {"tag": "nmicro4-chunk512", "expect_improve": True,
+             "hypothesis": ("bigger attention chunks cut both score-buffer "
+                            "memory (fits n_micro=4) and K/V re-read "
+                            "traffic"),
+             "change": "n_micro 4 + score budget 2^33",
+             "kw": {"n_micro": 4},
+             "env": {"REPRO_SCORE_BUDGET_LOG2": "33"}},
+            {"tag": "nmicro2-chunk512", "expect_improve": True,
+             "hypothesis": "quarter the gathers if memory allows",
+             "change": "n_micro 2 + score budget 2^33",
+             "kw": {"n_micro": 2},
+             "env": {"REPRO_SCORE_BUDGET_LOG2": "33"}},
+        ],
+        "final_note": ("negative result with full attribution: the 107.9s "
+                       "term is the standard Megatron-TP row-parallel "
+                       "activation all-reduce (f32[2,4096,8192] x160 = "
+                       "4/layer x 100L x 8 micro), NOT FSDP weight "
+                       "gathers — n_micro, bf16 params, and boundary "
+                       "re-sharding are all refuted as predicted once "
+                       "attribution was in hand. ~2x of it is CPU-backend "
+                       "f32 staging of bf16 partial sums (TPU reduces "
+                       "bf16: ~54s adjusted). The framework-level fixes "
+                       "are Megatron sequence-parallelism inside the "
+                       "layer (not boundary constraints — measured 3.2x "
+                       "worse) and comm/compute overlap; cross-pod, the "
+                       "int8-compressed gradient all-reduce "
+                       "(trainer.int8_allreduce) halves DCN bytes"),
+    },
+]
+
+
+def main(print_rows=True):
+    log = []
+    for cell in CELLS:
+        try:
+            log.append(climb(cell))
+        except Exception as e:
+            print(f"[perf] {cell['arch']} x {cell['shape']} failed: {e}")
+    os.makedirs(os.path.dirname(PERF_LOG), exist_ok=True)
+    with open(PERF_LOG, "w") as f:
+        json.dump(log, f, indent=1)
+    print(f"[perf] wrote {PERF_LOG}")
+    return []
+
+
+if __name__ == "__main__":
+    main()

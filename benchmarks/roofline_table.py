@@ -1,0 +1,69 @@
+"""Aggregate the dry-run artifacts (results/dryrun/*.json) into the
+EXPERIMENTS.md roofline tables: per (arch x shape x mesh), the three terms,
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPS, memory fit."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "dryrun")
+HBM = 16 * 2**30
+
+
+def load_all():
+    out = []
+    for f in sorted(glob.glob(os.path.join(RESULTS_DIR, "*.json"))):
+        with open(f) as fh:
+            out.append(json.load(fh))
+    return out
+
+
+def fmt_row(r):
+    t = r["roofline"]
+    m = r["memory"]["peak_bytes_per_device"] / 2**30
+    fit = "ok" if m <= 16 else f"OVER({m:.0f}G)"
+    return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['quant']} | "
+            f"{t['compute_s']:.4f} | {t['memory_s']:.4f} | "
+            f"{t['collective_s']:.4f} | {t['dominant'].replace('_s','')} | "
+            f"{r['useful_flops_ratio']:.2f} | {m:.1f} | {fit} |")
+
+
+def main(print_rows=True):
+    rows = []
+    recs = load_all()
+    ok = [r for r in recs if r.get("status") == "ok"]
+    skipped = [r for r in recs if r.get("status") == "skipped"]
+    errors = [r for r in recs if r.get("status") == "error"]
+    rows.append(f"roofline/cells_ok,0,{len(ok)}")
+    rows.append(f"roofline/cells_skipped,0,{len(skipped)}")
+    rows.append(f"roofline/cells_error,0,{len(errors)}")
+    for r in ok:
+        t = r["roofline"]
+        name = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}/{r['quant']}"
+        rows.append(f"{name},{t['step_s_lower_bound'] * 1e6:.0f},"
+                    f"dom={t['dominant'].replace('_s', '')}"
+                    f";useful={r['useful_flops_ratio']:.2f}")
+    for r in errors:
+        rows.append(f"roofline/ERROR/{r['arch']}/{r['shape']}/{r['mesh']},0,"
+                    f"{r['error'][:60]}")
+    if print_rows:
+        for r_ in rows:
+            print(r_)
+    return rows
+
+
+def markdown_table(mesh=None):
+    recs = [r for r in load_all() if r.get("status") == "ok"]
+    if mesh:
+        recs = [r for r in recs if r["mesh"] == mesh]
+    hdr = ("| arch | shape | mesh | quant | compute_s | memory_s | "
+           "collective_s | dominant | useful | GiB/dev | fits |\n"
+           "|---|---|---|---|---|---|---|---|---|---|---|")
+    return hdr + "\n" + "\n".join(fmt_row(r) for r in recs)
+
+
+if __name__ == "__main__":
+    main()
+    print(markdown_table())

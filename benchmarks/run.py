@@ -1,0 +1,34 @@
+"""Benchmark harness — one entry per paper table/figure (+ the roofline
+aggregate). Prints ``name,us_per_call,derived`` CSV."""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (fig1_distributions, fig2_cot_length,
+                            fig4_repetition, roofline_table, table1_fidelity,
+                            table2_w4a8, table3_efficiency)
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod in (table1_fidelity, table2_w4a8, table3_efficiency,
+                fig1_distributions, fig2_cot_length, fig4_repetition,
+                roofline_table):
+        t0 = time.time()
+        try:
+            mod.main(print_rows=True)
+            print(f"bench/{mod.__name__.split('.')[-1]}/wall_s,0,"
+                  f"{time.time() - t0:.1f}")
+        except Exception as e:  # keep going; report at the end
+            failures += 1
+            print(f"bench/{mod.__name__.split('.')[-1]}/ERROR,0,"
+                  f"{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

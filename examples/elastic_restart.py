@@ -1,0 +1,53 @@
+"""Fault-tolerance demo: train, kill mid-run (simulated preemption),
+resume from the atomic checkpoint with exact data skip-ahead, and verify
+the loss trajectory is identical to an uninterrupted run.
+
+    PYTHONPATH=src python examples/elastic_restart.py
+"""
+import os
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.checkpoint import Checkpointer
+from repro.configs import get_arch, reduced
+from repro.data import DataConfig, SyntheticLM
+from repro.optim import adamw
+from repro.train import trainer
+
+cfg = reduced(get_arch("qwen3-0.6b"))
+data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=48, seed=1))
+ocfg = adamw.OptConfig(lr=2e-3, warmup_steps=5, total_steps=30)
+step = jax.jit(trainer.make_train_step(cfg, ocfg, remat=False))
+
+# uninterrupted reference run
+state = trainer.init_state(jax.random.PRNGKey(7), cfg, ocfg)
+ref_losses = []
+for i in range(20):
+    state, m = step(state, data.batch(i, 4))
+    ref_losses.append(float(m["loss"]))
+
+# interrupted run: checkpoint at step 10, "crash", resume, continue
+with tempfile.TemporaryDirectory() as d:
+    ck = Checkpointer(d)
+    state = trainer.init_state(jax.random.PRNGKey(7), cfg, ocfg)
+    for i in range(10):
+        state, m = step(state, data.batch(i, 4))
+    ck.save(10, state, blocking=True)
+    print(f"checkpoint at step 10 (loss {float(m['loss']):.4f}); "
+          f"simulating preemption + restart")
+
+    del state  # the 'crash'
+    state2 = trainer.init_state(jax.random.PRNGKey(999), cfg, ocfg)  # fresh
+    state2 = ck.restore(state2)  # elastic restore (any mesh/sharding)
+    losses2 = []
+    for i in range(10, 20):      # deterministic skip-ahead data
+        state2, m = step(state2, data.batch(i, 4))
+        losses2.append(float(m["loss"]))
+
+np.testing.assert_allclose(losses2, ref_losses[10:], rtol=1e-5)
+print("resumed trajectory identical to uninterrupted run:")
+for a, b in zip(ref_losses[10:], losses2):
+    print(f"  ref={a:.5f} resumed={b:.5f}")
+print("OK")

@@ -1,0 +1,35 @@
+"""Quickstart: build a model, quantize it W8A8, run both, compare.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch, reduced
+from repro.core.quant import INT8, calibrate, ptq
+from repro.models import transformer
+
+# 1. An openPangu-class model (reduced to CPU size; full config also works).
+cfg = reduced(get_arch("pangu-1b"))
+params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+
+# 2. A couple of calibration batches (per-channel activation absmax).
+batches = [{"tokens": jax.random.randint(jax.random.PRNGKey(i), (2, 32),
+                                         0, cfg.vocab)} for i in range(2)]
+stats = calibrate.collect_stats(params, batches, cfg)
+
+# 3. Post-training quantization is a pure pytree transformation.
+params_int8 = ptq.quantize_model(params, cfg, INT8, stats)
+n_int8 = sum(l.size for l in jax.tree.leaves(params_int8)
+             if l.dtype == jnp.int8)
+print(f"quantized: {n_int8 / 1e6:.1f}M int8 weights")
+
+# 4. Same model code runs both precisions.
+batch = batches[0]
+logits_fp, _ = transformer.forward_train(params, batch, cfg, remat=False)
+logits_q, _ = transformer.forward_train(params_int8, batch, cfg,
+                                        qcfg=INT8, impl="xla", remat=False)
+top1 = float(jnp.mean(jnp.argmax(logits_fp, -1) == jnp.argmax(logits_q, -1)))
+print(f"FP vs INT8 top-1 agreement: {top1:.3f}")
+assert top1 > 0.9
+print("OK")

@@ -1,0 +1,4 @@
+"""Architecture registry: one module per assigned architecture."""
+from repro.configs.base import (ArchConfig, MoEConfig, ARCH_IDS, get_arch,
+                                reduced)  # noqa: F401
+from repro.configs.shapes import SHAPES, ShapeSpec, cell_supported  # noqa: F401

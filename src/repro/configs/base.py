@@ -1,0 +1,175 @@
+"""Architecture configuration schema + registry.
+
+Every assigned architecture is a `ArchConfig` instance in its own module
+(`configs/<id>.py`), selectable via ``--arch <id>`` in the launchers. The
+model stack (models/transformer.py) is entirely driven by `pattern`: the
+repeating block sequence scanned over `n_layers // len(pattern)` groups.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 8
+    top_k: int = 2
+    capacity_factor: float = 1.25
+    impl: str = "dropping"          # "dense" (oracle) | "dropping" (deployed)
+    aux_loss_weight: float = 0.01
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                     # dense | moe | hybrid | ssm | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0               # 0 -> d_model // n_heads
+    pattern: Tuple[str, ...] = ("self",)
+    act: str = "swiglu"             # swiglu | squared_relu | gelu
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 1e4
+    sliding_window: int = 0         # 0 = full causal attention
+    moe: Optional[MoEConfig] = None
+    # SSM / hybrid / xLSTM
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2             # mamba inner = ssm_expand * d_model
+    ssm_chunk: int = 256            # chunked selective-scan block
+    xlstm_proj: int = 2             # mLSTM up-projection factor
+    # Modality frontends (stubs per assignment)
+    frontend: str = "tokens"        # tokens | embeddings | tokens+image
+    n_ctx_tokens: int = 0           # vlm: image tokens (cross-attn context)
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    source: str = ""                # provenance tag from the assignment
+
+    def __post_init__(self):
+        assert self.n_layers % len(self.pattern) == 0, \
+            f"{self.name}: n_layers {self.n_layers} % pattern {len(self.pattern)}"
+        if self.n_heads:
+            assert self.n_heads % max(self.n_kv_heads, 1) == 0
+
+    # -- derived ------------------------------------------------------------
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def n_groups(self) -> int:
+        return self.n_layers // len(self.pattern)
+
+    @property
+    def d_inner(self) -> int:      # mamba branch inner width
+        return self.ssm_expand * self.d_model
+
+    @property
+    def uses_attention(self) -> bool:
+        return any(b in ("self", "moe", "cross", "hybrid") for b in self.pattern)
+
+    @property
+    def subquadratic(self) -> bool:
+        """Eligible for long_500k: bounded (or no) attention state."""
+        attn_blocks = [b for b in self.pattern if b in ("self", "moe", "cross",
+                                                        "hybrid")]
+        return (not attn_blocks) or self.sliding_window > 0
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + blocks + head)."""
+        d, ff, v, hd = self.d_model, self.d_ff, self.vocab, self.hd
+        nq, nkv = self.n_heads, self.n_kv_heads
+        per = {}
+        attn = d * (nq + 2 * nkv) * hd + nq * hd * d
+        mlp_mult = 3 if self.act == "swiglu" else 2
+        per["self"] = attn + mlp_mult * d * ff
+        per["cross"] = attn + mlp_mult * d * ff
+        if self.moe:
+            per["moe"] = attn + self.moe.num_experts * mlp_mult * d * ff \
+                + d * self.moe.num_experts
+        di, n = self.d_inner, self.ssm_state
+        per["hybrid"] = per["self"] + (2 * d * di + di * (2 * n + 8) + di * d
+                                       + di * self.ssm_conv)
+        dm = self.xlstm_proj * d
+        per["mlstm"] = 2 * d * dm + 3 * dm * dm + dm * d
+        per["slstm"] = 8 * d * d // max(1, 1) + 2 * d * ff if ff else 8 * d * d
+        total = sum(per[b] for b in self.pattern) * self.n_groups
+        total += v * d * (1 if self.tie_embeddings else 2)
+        return total
+
+    def active_param_count(self) -> int:
+        """Per-token active params (MoE: top_k of num_experts)."""
+        if not self.moe:
+            return self.param_count()
+        d, ff = self.d_model, self.d_ff
+        mlp_mult = 3 if self.act == "swiglu" else 2
+        inactive = (self.moe.num_experts - self.moe.top_k) * mlp_mult * d * ff
+        return self.param_count() - inactive * self.n_layers
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+ARCH_IDS = (
+    "llama32_vision_90b", "qwen2_1_5b", "qwen3_0_6b", "glm4_9b",
+    "nemotron4_15b", "mixtral_8x7b", "mixtral_8x22b", "hymba_1_5b",
+    "xlstm_350m", "musicgen_medium",
+    # paper's own subjects (proxy configs, see DESIGN.md §8)
+    "pangu_1b", "pangu_7b",
+)
+
+_ALIASES = {
+    "llama-3.2-vision-90b": "llama32_vision_90b",
+    "qwen2-1.5b": "qwen2_1_5b",
+    "qwen3-0.6b": "qwen3_0_6b",
+    "glm4-9b": "glm4_9b",
+    "nemotron-4-15b": "nemotron4_15b",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "hymba-1.5b": "hymba_1_5b",
+    "xlstm-350m": "xlstm_350m",
+    "musicgen-medium": "musicgen_medium",
+    "pangu-1b": "pangu_1b",
+    "pangu-7b": "pangu_7b",
+}
+
+
+def get_arch(name: str) -> ArchConfig:
+    key = _ALIASES.get(name, name).replace("-", "_").replace(".", "_")
+    if key not in ARCH_IDS:
+        raise KeyError(f"unknown arch {name!r}; have {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{key}")
+    return mod.CONFIG
+
+
+def reduced(cfg: ArchConfig, groups: int = 1) -> ArchConfig:
+    """CPU-smoke-test-sized member of the same family (same pattern/topology,
+    tiny widths). Used by per-arch smoke tests; full configs are exercised
+    only via the AOT dry-run."""
+    p = len(cfg.pattern)
+    nh = 4
+    nkv = max(1, min(cfg.n_kv_heads, 2)) if cfg.n_kv_heads < cfg.n_heads else nh
+    return dataclasses.replace(
+        cfg,
+        n_layers=p * groups,
+        d_model=128,
+        n_heads=nh,
+        n_kv_heads=nkv,
+        head_dim=32,
+        d_ff=256 if cfg.d_ff else 0,
+        vocab=512,
+        sliding_window=min(cfg.sliding_window, 32) if cfg.sliding_window else 0,
+        ssm_state=min(cfg.ssm_state, 8) if cfg.ssm_state else 0,
+        ssm_chunk=16,
+        n_ctx_tokens=min(cfg.n_ctx_tokens, 16) if cfg.n_ctx_tokens else 0,
+        moe=dataclasses.replace(cfg.moe, num_experts=4, capacity_factor=2.0)
+        if cfg.moe else None,
+    )

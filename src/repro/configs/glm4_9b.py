@@ -1,0 +1,20 @@
+"""Assigned architecture config: glm4-9b [dense]
+
+40L d_model=4096 32H (GQA kv=2) d_ff=13696 vocab=151552; RoPE, GQA.
+[hf:THUDM/glm-4-9b; hf]. Simplification: full rotary (GLM uses partial).
+"""
+from repro.configs.base import ArchConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="glm4_9b",
+    family="dense",
+    n_layers=40,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=2,
+    head_dim=128,
+    d_ff=13696,
+    vocab=151552,
+    rope_theta=10000.0,
+    source="hf:THUDM/glm-4-9b; hf",
+)

@@ -1,0 +1,26 @@
+"""Assigned architecture config: llama-3.2-vision-90b [vlm]
+
+100L d_model=8192 64H (GQA kv=8) d_ff=28672 vocab=128256; cross-attn
+image layers every 5th position. [hf:meta-llama/Llama-3.2-11B-Vision;
+unverified]. Vision frontend is a stub: input_specs() supplies
+precomputed patch embeddings as cross-attention context.
+"""
+from repro.configs.base import ArchConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="llama32_vision_90b",
+    family="vlm",
+    n_layers=100,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=28672,
+    vocab=128256,
+    pattern=("self", "self", "self", "self", "cross"),
+    act="swiglu",
+    rope_theta=500000.0,
+    frontend="tokens+image",
+    n_ctx_tokens=1024,
+    source="hf:meta-llama/Llama-3.2-11B-Vision; unverified",
+)

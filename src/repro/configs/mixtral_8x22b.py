@@ -1,0 +1,23 @@
+"""Assigned architecture config: mixtral-8x22b [moe]
+
+56L d_model=6144 48H (GQA kv=8) d_ff=16384 vocab=32768; 8 experts
+top-2, sliding-window attention (4096). [arXiv:2401.04088; hf]
+"""
+from repro.configs.base import ArchConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="mixtral_8x22b",
+    family="moe",
+    n_layers=56,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=16384,
+    vocab=32768,
+    pattern=("moe",),
+    sliding_window=4096,
+    rope_theta=1000000.0,
+    moe=MoEConfig(num_experts=8, top_k=2),
+    source="arXiv:2401.04088; hf",
+)

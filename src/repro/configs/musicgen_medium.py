@@ -1,0 +1,23 @@
+"""Assigned architecture config: musicgen-medium [audio]
+
+48L d_model=1536 24H (kv=24, MHA) d_ff=6144 vocab=2048; decoder-only
+over EnCodec tokens. [arXiv:2306.05284; hf]. Codec frontend is a stub:
+input_specs() supplies precomputed frame embeddings (B, S, d).
+"""
+from repro.configs.base import ArchConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="musicgen_medium",
+    family="audio",
+    n_layers=48,
+    d_model=1536,
+    n_heads=24,
+    n_kv_heads=24,
+    head_dim=64,
+    d_ff=6144,
+    vocab=2048,
+    act="gelu",
+    frontend="embeddings",
+    rope_theta=10000.0,
+    source="arXiv:2306.05284; hf",
+)

@@ -1,0 +1,21 @@
+"""Assigned architecture config: nemotron-4-15b [dense]
+
+32L d_model=6144 48H (GQA kv=8) d_ff=24576 vocab=256000; GQA,
+squared-ReLU MLP (ungated). [arXiv:2402.16819; unverified]
+"""
+from repro.configs.base import ArchConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="nemotron4_15b",
+    family="dense",
+    n_layers=32,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=24576,
+    vocab=256000,
+    act="squared_relu",
+    rope_theta=10000.0,
+    source="arXiv:2402.16819; unverified",
+)

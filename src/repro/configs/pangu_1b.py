@@ -1,0 +1,22 @@
+"""Assigned architecture config: openPangu-Embedded-1B (paper subject, proxy)
+
+Proxy config for the paper's 1B subject (checkpoint unavailable
+offline): dense LLaMA-class GQA decoder of ~1B params.
+[arXiv:2505.22375 class; proxy]
+"""
+from repro.configs.base import ArchConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="pangu_1b",
+    family="dense",
+    n_layers=20,
+    d_model=1536,
+    n_heads=12,
+    n_kv_heads=4,
+    head_dim=128,
+    d_ff=5632,
+    vocab=153376,
+    tie_embeddings=True,
+    rope_theta=10000.0,
+    source="arXiv:2505.22375 class; proxy",
+)

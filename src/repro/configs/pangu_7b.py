@@ -1,0 +1,19 @@
+"""Assigned architecture config: openPangu-Embedded-7B (paper subject, proxy)
+
+Proxy config for the paper's 7B subject. [arXiv:2505.22375 class; proxy]
+"""
+from repro.configs.base import ArchConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="pangu_7b",
+    family="dense",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=12288,
+    vocab=153376,
+    rope_theta=10000.0,
+    source="arXiv:2505.22375 class; proxy",
+)

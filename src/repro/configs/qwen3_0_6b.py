@@ -1,0 +1,22 @@
+"""Assigned architecture config: qwen3-0.6b [dense]
+
+28L d_model=1024 16H (GQA kv=8) d_ff=3072 vocab=151936; qk_norm, GQA,
+explicit head_dim=128. [hf:Qwen/Qwen3-8B; hf]
+"""
+from repro.configs.base import ArchConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="qwen3_0_6b",
+    family="dense",
+    n_layers=28,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=3072,
+    vocab=151936,
+    qk_norm=True,
+    rope_theta=1000000.0,
+    tie_embeddings=True,
+    source="hf:Qwen/Qwen3-8B; hf",
+)

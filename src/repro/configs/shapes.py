@@ -1,0 +1,47 @@
+"""Assigned input-shape set (all LM-family archs share these four cells).
+
+  train_4k     seq 4,096   x global_batch 256   -> train_step
+  prefill_32k  seq 32,768  x global_batch 32    -> prefill
+  decode_32k   seq 32,768  x global_batch 128   -> serve_step (1 new token,
+                                                  KV cache of seq_len)
+  long_500k    seq 524,288 x global_batch 1     -> serve_step; requires a
+               sub-quadratic arch (SWA rolling cache / SSM / xLSTM); skipped
+               for pure full-attention archs per the assignment.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str            # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+def cell_supported(cfg, shape: ShapeSpec) -> Tuple[bool, str]:
+    """Assignment rules: long_500k only for sub-quadratic archs."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, ("skip: pure full-attention arch cannot decode at "
+                       "524k context (quadratic); per assignment rule")
+    return True, ""
+
+
+def all_cells(arch_ids, get_arch):
+    """Yield (arch_id, shape_name, supported, reason)."""
+    for a in arch_ids:
+        cfg = get_arch(a)
+        for sname, spec in SHAPES.items():
+            ok, why = cell_supported(cfg, spec)
+            yield a, sname, ok, why

@@ -1,0 +1,22 @@
+"""Assigned architecture config: xlstm-350m [ssm]
+
+24L d_model=1024 4H (kv=4) d_ff=0 vocab=50304; alternating sLSTM +
+mLSTM blocks (internal projections, no separate FFN).
+[arXiv:2405.04517; unverified]
+"""
+from repro.configs.base import ArchConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="xlstm_350m",
+    family="ssm",
+    n_layers=24,
+    d_model=1024,
+    n_heads=4,
+    n_kv_heads=4,
+    head_dim=256,
+    d_ff=0,
+    vocab=50304,
+    pattern=("mlstm", "slstm"),
+    xlstm_proj=2,
+    source="arXiv:2405.04517; unverified",
+)

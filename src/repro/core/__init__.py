@@ -1,0 +1,1 @@
+"""The paper's primary contribution: the unified low-bit PTQ framework."""

@@ -1,0 +1,7 @@
+"""Core PTQ library: the paper's contribution as composable JAX modules."""
+from repro.core.quant.qtypes import (  # noqa: F401
+    QuantConfig, QTensor, INT8, W4A8, W4A8_SMOOTH, W4A8_HADAMARD, FP16,
+    PRESETS, preset, quantize_weight, quantize_act, fake_quant,
+    pack_int4, unpack_int4, pack_int4_halves, unpack_int4_halves,
+)
+from repro.core.quant import smooth, hadamard, qlinear  # noqa: F401

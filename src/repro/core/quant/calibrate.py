@@ -1,0 +1,34 @@
+"""Calibration: collect per-channel activation absmax over a calibration set.
+
+The paper calibrates scales on downstream task data (§4.1). Here the model's
+forward pass carries a `Taps` accumulator; every quantizable linear records
+the absmax of its input channels. Stats are max-merged across calibration
+batches and keyed `"{pattern_idx}/{site}"` with a leading per-group axis
+(G, K) matching the scan-stacked parameters.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+
+
+def collect_stats(params, batches: Iterable[dict], cfg, *,
+                  dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    """Run `batches` through the fp model, return merged tap stats."""
+    @jax.jit
+    def one(p, b):
+        _, aux = transformer.forward_train(p, b, cfg, collect_taps=True,
+                                           remat=False, dtype=dtype)
+        return aux["taps"]
+
+    merged: Dict[str, jax.Array] = {}
+    for b in batches:
+        taps = one(params, b)
+        for k, v in taps.items():
+            merged[k] = v if k not in merged else jnp.maximum(merged[k], v)
+    assert merged, "calibration produced no taps"
+    return jax.tree.map(jax.device_get, merged)

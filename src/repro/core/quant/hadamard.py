@@ -1,0 +1,75 @@
+"""Hadamard rotation for outlier-free quantization (paper Eq. 4).
+
+    Y = (X H)(H^T W)
+
+with H a normalized (1/sqrt(b)) block-diagonal Sylvester-Hadamard matrix.
+Block-diagonal structure (block = 128, matching the MXU tile) keeps the
+online activation transform O(K log b) per token via the fast
+Walsh-Hadamard butterfly, while the weight side is rotated once offline at
+PTQ time. Because Sylvester H is symmetric, H^T = H and the same block
+transform is applied to both sides along the reduction axis; the product is
+mathematically unchanged in full precision.
+"""
+from __future__ import annotations
+
+from functools import lru_cache
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@lru_cache(maxsize=None)
+def _hadamard_np(n: int) -> np.ndarray:
+    assert n & (n - 1) == 0 and n > 0, f"Hadamard size must be a power of 2: {n}"
+    h = np.array([[1.0]], dtype=np.float32)
+    while h.shape[0] < n:
+        h = np.block([[h, h], [h, -h]])
+    return h / np.sqrt(n)
+
+
+def hadamard_matrix(n: int) -> jax.Array:
+    """Normalized symmetric orthogonal Hadamard matrix (Sylvester)."""
+    return jnp.asarray(_hadamard_np(n))
+
+
+def block_size_for(k: int, preferred: int = 128) -> int:
+    """Largest power-of-two block <= preferred that divides K."""
+    b = preferred
+    while b > 1 and k % b != 0:
+        b //= 2
+    return b
+
+
+def block_hadamard_matmul(x: jax.Array, block: int) -> jax.Array:
+    """Apply block-diagonal H along the last axis via explicit matmul
+    (dense reference; the Pallas kernel + FWHT below are the fast paths)."""
+    k = x.shape[-1]
+    b = block_size_for(k, block)
+    h = hadamard_matrix(b).astype(jnp.float32)
+    xs = x.astype(jnp.float32).reshape(x.shape[:-1] + (k // b, b))
+    out = jnp.einsum("...gb,bc->...gc", xs, h)
+    return out.reshape(x.shape).astype(x.dtype)
+
+
+def block_fwht(x: jax.Array, block: int) -> jax.Array:
+    """Fast Walsh-Hadamard transform on contiguous `block`-sized groups of
+    the last axis. O(K log block) — the online rotation used at serve time."""
+    k = x.shape[-1]
+    b = block_size_for(k, block)
+    xs = x.astype(jnp.float32).reshape(x.shape[:-1] + (k // b, b))
+    h = 1
+    while h < b:
+        xs = xs.reshape(x.shape[:-1] + (k // b, b // (2 * h), 2, h))
+        a = xs[..., 0, :]
+        c = xs[..., 1, :]
+        xs = jnp.concatenate([a + c, a - c], axis=-1)
+        h *= 2
+    xs = xs.reshape(x.shape[:-1] + (k,)) / jnp.sqrt(jnp.float32(b))
+    return xs.astype(x.dtype)
+
+
+def rotate_weight(w: jax.Array, block: int = 128) -> jax.Array:
+    """Offline weight-side rotation: W' = H^T W = H W (block-diagonal along K)."""
+    assert w.ndim == 2
+    return block_hadamard_matmul(w.T, block).T  # rotate along K (axis 0)

@@ -1,0 +1,145 @@
+"""Model-level post-training quantization: a pure pytree transformation.
+
+    params_fp --(calib stats, QuantConfig)--> params_q
+
+For every quant site declared by the block registry (transformer.BLOCKS):
+  1. optional SmoothQuant: s from calibrated activation absmax and the
+     *combined* weight absmax of all linears sharing that input (fused QKV /
+     gate-up share one vector, as SmoothQuant prescribes for fused GEMMs);
+  2. optional Hadamard: offline weight-side rotation H^T W;
+  3. symmetric weight quantization (per-channel int8 / per-group int4).
+
+Stacked parameter axes (scan groups G, experts E) are handled by nested
+vmap — per-group-element and per-expert scales come out naturally. The
+result runs through the exact same model code (qlinear dispatch).
+
+Because the transformation is pure jnp, `jax.eval_shape(quantize_model, …)`
+yields the quantized parameter ShapeDtypeStructs for the dry-run without
+materializing anything.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import hadamard, smooth
+from repro.core.quant.qtypes import QuantConfig, quantize_weight
+from repro.models.transformer import BLOCKS
+
+
+def _get_path(tree: dict, path: str) -> dict:
+    node = tree
+    for part in path.split("/"):
+        node = node[part]
+    return node
+
+
+def _set_path(tree: dict, path: str, value) -> dict:
+    parts = path.split("/")
+    node = tree
+    for part in parts[:-1]:
+        node = node[part]
+    node[parts[-1]] = value
+    return tree
+
+
+def _w_absmax_per_in(w: jax.Array) -> jax.Array:
+    """|w| reduced to (G, K): max over output channels and expert dims."""
+    red = tuple(i for i in range(w.ndim) if i not in (0, w.ndim - 2))
+    return jnp.max(jnp.abs(w.astype(jnp.float32)), axis=red)
+
+
+def _quantize_leaf(w: jax.Array, s: Optional[jax.Array], qcfg: QuantConfig):
+    """w: (G, [E,] K, N); s: (G, K) or None -> QTensor pytree (leading dims
+    preserved on data/scales)."""
+
+    def q2d(w2, s2):
+        if s2 is not None:
+            w2 = smooth.apply_to_weight(w2, s2)
+        if qcfg.hadamard:
+            w2 = hadamard.rotate_weight(w2, qcfg.hadamard_block)
+        return quantize_weight(w2.astype(jnp.float32), qcfg)
+
+    if w.ndim == 2:
+        return q2d(w, s)
+    if w.ndim == 3:
+        if s is None:
+            return jax.vmap(lambda a: q2d(a, None))(w)
+        return jax.vmap(q2d)(w, s)
+    if w.ndim == 4:  # (G, E, K, N), s (G, K) shared across experts
+        if s is None:
+            return jax.vmap(jax.vmap(lambda a: q2d(a, None)))(w)
+        return jax.vmap(lambda we, sg: jax.vmap(lambda a: q2d(a, sg))(we))(w, s)
+    raise ValueError(f"unsupported weight ndim {w.ndim}")
+
+
+def quantize_model(params: dict, cfg, qcfg: QuantConfig,
+                   stats: Optional[Dict[str, jax.Array]] = None) -> dict:
+    """cfg: ArchConfig; stats: calibration taps {"i/site": (G, K)} — required
+    when qcfg.smooth. Embeddings / norms / router / lm_head stay fp."""
+    if qcfg is None:
+        return params
+    if qcfg.smooth and stats is None:
+        raise ValueError("SmoothQuant needs calibration stats")
+
+    out = jax.tree.map(lambda x: x, params)  # structural copy
+    for i, btype in enumerate(cfg.pattern):
+        sites = BLOCKS[btype].quant_sites
+        bp = out["blocks"][str(i)]
+        for tap, paths in sites.items():
+            leaves = [_get_path(bp, pth) for pth in paths]
+            ws = [leaf["w"] for leaf in leaves]
+            k_dim = ws[0].shape[-2]
+            if k_dim % 2 and qcfg.weight_bits == 4:
+                continue  # unpackable; keep fp (not hit by assigned archs)
+            s = None
+            if qcfg.smooth:
+                act_am = jnp.asarray(stats[f"{i}/{tap}"])      # (G, K)
+                w_am = jnp.max(jnp.stack([_w_absmax_per_in(w) for w in ws]), 0)
+                s = jax.vmap(partial(smooth.smooth_scales,
+                                     alpha=qcfg.smooth_alpha))(act_am, w_am)
+            for pth, leaf in zip(paths, leaves):
+                new_leaf = {k: v for k, v in leaf.items() if k != "w"}
+                new_leaf["w_q"] = _quantize_leaf(leaf["w"], s, qcfg)
+                s_leaf = s
+                if s is not None and leaf["w"].ndim == 4:
+                    # experts: tile the shared smooth vector over E so the
+                    # per-expert vmap in moe._expert_ffn sees matching axes
+                    g, e, k, _ = leaf["w"].shape
+                    s_leaf = jnp.broadcast_to(s[:, None, :], (g, e, k))
+                new_leaf["smooth"] = s_leaf if qcfg.smooth else None
+                _set_path(bp, pth, new_leaf)
+    return out
+
+
+def quantized_param_shapes(params_shapes, cfg, qcfg: QuantConfig,
+                           stats_shapes=None):
+    """AOT: ShapeDtypeStructs of the PTQ'd tree (used by launch/dryrun.py)."""
+    if qcfg is None:
+        return params_shapes
+    if qcfg.smooth and stats_shapes is None:
+        stats_shapes = synthetic_stats_shapes(params_shapes, cfg)
+    return jax.eval_shape(lambda p, s: quantize_model(p, cfg, qcfg, s),
+                          params_shapes, stats_shapes)
+
+
+def synthetic_stats_shapes(params_shapes, cfg):
+    """Stats ShapeDtypeStructs (G, K) per site, derived from param shapes."""
+    stats = {}
+    for i, btype in enumerate(cfg.pattern):
+        for tap, paths in BLOCKS[btype].quant_sites.items():
+            w = _get_path(params_shapes["blocks"][str(i)], paths[0])["w"]
+            g, k = w.shape[0], w.shape[-2]
+            stats[f"{i}/{tap}"] = jax.ShapeDtypeStruct((g, k), jnp.float32)
+    return stats
+
+
+def synthetic_stats(params, cfg, value: float = 1.0):
+    """Constant stats (for tests / no-calib smoothing baselines)."""
+    shapes = synthetic_stats_shapes(
+        jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params),
+        cfg)
+    return {k: jnp.full(v.shape, value, v.dtype) for k, v in shapes.items()}

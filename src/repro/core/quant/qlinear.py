@@ -1,0 +1,103 @@
+"""Quantized linear layer — the single GEMM entry point for all models.
+
+A linear's params are a plain dict in one of two forms:
+
+  fp:        {"w": (K, N) float [, "b": (N,)]}
+  quantized: {"w_q": QTensor [, "b"] [, "smooth": (K,) f32]}
+
+`apply` dispatches on the form, so post-training quantization is a pure
+pytree transformation (core/quant/ptq.py) and model code never changes.
+
+Quantized execution pipeline (paper §3.1-3.2):
+    x --(/smooth)--(xH block-FWHT)--> per-token int8 (+scale)   [one kernel]
+      --> int8/int4 GEMM, int32 accum, fused dequant epilogue   [one kernel]
+      --> + bias (fp)
+
+`impl` selects pallas / pallas_interpret / xla; "fake" runs the float
+quant-dequant simulation (same rounding semantics) used by the accuracy
+benchmarks, where integer GEMM on CPU would be needlessly slow.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import qtypes
+from repro.core.quant.qtypes import QuantConfig, QTensor
+from repro.core.quant.hadamard import block_hadamard_matmul
+from repro.kernels import ops
+
+
+def init_linear(key, k: int, n: int, *, bias: bool = False,
+                dtype=jnp.float32, scale: Optional[float] = None) -> dict:
+    scale = scale if scale is not None else (1.0 / jnp.sqrt(k))
+    p = {"w": (jax.random.normal(key, (k, n), jnp.float32) * scale).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((n,), dtype)
+    return p
+
+
+def is_quantized(p: dict) -> bool:
+    return "w_q" in p
+
+
+def _fake_forward(p: dict, x: jax.Array, cfg: QuantConfig) -> jax.Array:
+    """Float simulation: dequantized weights × fake-quantized activations."""
+    wq: QTensor = p["w_q"]
+    w = wq.dequantize(jnp.float32)
+    t = x.astype(jnp.float32)
+    if p.get("smooth") is not None:
+        t = t / p["smooth"]
+    if cfg.hadamard:
+        t = block_hadamard_matmul(t, cfg.hadamard_block)
+    if cfg.act_bits == 8:
+        q, s = qtypes.quantize_act(t, bits=8, granularity=cfg.act_granularity)
+        t = q.astype(jnp.float32) * s
+    return t @ w
+
+
+def _int_forward(p: dict, x: jax.Array, cfg: QuantConfig,
+                 impl: Optional[str]) -> jax.Array:
+    wq: QTensor = p["w_q"]
+    if cfg.act_bits == 16:
+        # Weight-only: dequantize + fp GEMM (bandwidth-bound decode helper).
+        w = wq.dequantize(x.dtype)
+        t = x
+        if p.get("smooth") is not None:
+            t = t / p["smooth"].astype(x.dtype)
+        if cfg.hadamard:
+            t = block_hadamard_matmul(t, cfg.hadamard_block)
+        return jnp.einsum("...k,kn->...n", t, w)
+
+    hb = cfg.hadamard_block if cfg.hadamard else 0
+    q, s = ops.quantize_act_dynamic(x, p.get("smooth"), hadamard_block=hb,
+                                    impl=impl)
+    if wq.bits == 8:
+        return ops.int8_matmul(q, wq.data, s, wq.scale,
+                               out_dtype=jnp.float32, impl=impl)
+    if wq.group_size:
+        return ops.w4a8_matmul(q, wq.data, s, wq.scale,
+                               group_size=wq.group_size,
+                               out_dtype=jnp.float32, impl=impl)
+    # ungrouped int4: unpack + int8 GEMM path
+    return ops.int8_matmul(q, wq.unpacked(), s, wq.scale,
+                           out_dtype=jnp.float32, impl=impl)
+
+
+def apply(p: dict, x: jax.Array, cfg: Optional[QuantConfig] = None,
+          impl: Optional[str] = None) -> jax.Array:
+    """Apply a (possibly quantized) linear. Output dtype follows x."""
+    if "w" in p:
+        y = jnp.einsum("...k,kn->...n", x, p["w"].astype(x.dtype))
+    else:
+        assert cfg is not None, "quantized params need a QuantConfig"
+        if impl == "fake":
+            y = _fake_forward(p, x, cfg)
+        else:
+            y = _int_forward(p, x, cfg, impl)
+        y = y.astype(x.dtype)
+    if p.get("b") is not None:
+        y = y + p["b"].astype(y.dtype)
+    return y

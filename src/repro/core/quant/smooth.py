@@ -1,0 +1,58 @@
+"""SmoothQuant diagonal scaling (paper Eq. 3, alpha = 0.5).
+
+    Y = (X S^{-1}) (S W),   s_j = max|X_j|^alpha / max|W_j|^(1-alpha)
+
+The activation-side division is exact in full precision and migrates
+quantization difficulty from outlier activation channels into the weights.
+
+We keep the activation-side vector explicit (`act_div`) and fuse it into the
+dynamic quantization step at runtime (one multiply per element inside the
+quant kernel — see kernels/quantize_act.py). For norm-fed linears the vector
+can instead be folded into the preceding RMSNorm gamma at zero runtime cost
+(`fold_into_norm`); both paths are numerically identical in fp32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def smooth_scales(act_absmax: jax.Array, w_absmax: jax.Array,
+                  alpha: float = 0.5, eps: float = 1e-5) -> jax.Array:
+    """Per-input-channel smoothing vector s (shape (K,)).
+
+    act_absmax: calibration per-channel max|X_j| (K,)
+    w_absmax:   per-input-channel  max|W_j|     (K,)  (reduced over outputs)
+    """
+    a = jnp.maximum(act_absmax.astype(jnp.float32), eps)
+    w = jnp.maximum(w_absmax.astype(jnp.float32), eps)
+    s = jnp.power(a, alpha) / jnp.power(w, 1.0 - alpha)
+    # Degenerate channels (both tiny) -> identity.
+    s = jnp.where((act_absmax < eps) & (w_absmax < eps), 1.0, s)
+    return jnp.maximum(s, eps)
+
+
+def apply_to_weight(w: jax.Array, s: jax.Array) -> jax.Array:
+    """W <- S W (rows scaled by s). w: (K, N), s: (K,)."""
+    return (w.astype(jnp.float32) * s[:, None]).astype(w.dtype)
+
+
+def fold_into_norm(gamma: jax.Array, s: jax.Array) -> jax.Array:
+    """Fold X -> X/s into the preceding RMSNorm/LayerNorm gain: gamma/s."""
+    return (gamma.astype(jnp.float32) / s).astype(gamma.dtype)
+
+
+def fold_into_prev_linear(w_prev: jax.Array, s: jax.Array) -> jax.Array:
+    """Fold X -> X/s into the producing linear's output channels: W[:, j]/s_j.
+
+    Exact for linear producers. For gated MLPs (SwiGLU) fold into the *up*
+    branch only: silu(g) * (u / s) scales the product by exactly 1/s.
+    """
+    return (w_prev.astype(jnp.float32) / s[None, :]).astype(w_prev.dtype)
+
+
+def fold_into_prev_linear_squared_relu(w_prev: jax.Array, s: jax.Array) -> jax.Array:
+    """Squared-ReLU producer (nemotron): relu(y*c)^2 = c^2 relu(y)^2 for c>0,
+    so scaling the producing weight by 1/sqrt(s) scales the output by 1/s —
+    exact because s > 0."""
+    return (w_prev.astype(jnp.float32) / jnp.sqrt(s)[None, :]).astype(w_prev.dtype)

@@ -1,0 +1,1 @@
+from repro.data.synthetic import DataConfig, SyntheticLM, make_prompts  # noqa

@@ -1,0 +1,5 @@
+"""Pallas TPU kernels for the low-bit inference framework.
+
+Modules: int8_gemm, w4a8_gemm, quantize_act, hadamard (kernels);
+ops (jit'd wrappers + dispatch); ref (pure-jnp oracles).
+"""

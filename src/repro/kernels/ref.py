@@ -1,0 +1,104 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each `*_ref` function defines the exact numerical contract its kernel must
+match (tests assert allclose between `interpret=True` kernel execution and
+these references across shape/dtype sweeps).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import qtypes
+from repro.core.quant.hadamard import block_hadamard_matmul
+
+
+# ---------------------------------------------------------------------------
+# INT8 (W8A8) GEMM with fused dequant epilogue
+# ---------------------------------------------------------------------------
+
+def int8_matmul_ref(x_q: jax.Array, w_q: jax.Array,
+                    x_scale: jax.Array, w_scale: jax.Array,
+                    out_dtype=jnp.float32) -> jax.Array:
+    """(M,K) int8 @ (K,N) int8 -> int32 accum -> * x_scale (M,1) * w_scale (1,N)."""
+    acc = jax.lax.dot_general(
+        x_q, w_q, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+    return (acc.astype(jnp.float32) * x_scale * w_scale).astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# W4A8 GEMM: packed int4 weights, per-group scales, int8 activations
+# ---------------------------------------------------------------------------
+
+def w4a8_matmul_ref(x_q: jax.Array, w_packed: jax.Array,
+                    x_scale: jax.Array, w_group_scale: jax.Array,
+                    group_size: int, out_dtype=jnp.float32) -> jax.Array:
+    """x_q: (M,K) int8; w_packed: (K//2,N) int8 in 'halves' layout;
+    w_group_scale: (K//G, N) f32; x_scale: (M,1) f32.
+
+    Contract: int32 accumulation within each K-group, float32 across groups
+    (matches the kernel's per-group dequant epilogue).
+    """
+    k = x_q.shape[1]
+    n = w_packed.shape[1]
+    g = group_size
+    w_q = qtypes.unpack_int4_halves(w_packed, g)          # (K, N) int4-valued
+    xg = x_q.reshape(x_q.shape[0], k // g, g)
+    wg = w_q.reshape(k // g, g, n)
+    # int32 accumulate per group
+    acc_g = jnp.einsum("mgk,gkn->mgn", xg.astype(jnp.int32), wg.astype(jnp.int32))
+    out = jnp.einsum("mgn,gn->mn", acc_g.astype(jnp.float32),
+                     w_group_scale.astype(jnp.float32))
+    return (out * x_scale).astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dynamic per-token activation quantization (optionally fused smooth / FWHT)
+# ---------------------------------------------------------------------------
+
+def quantize_act_ref(x: jax.Array,
+                     smooth: Optional[jax.Array] = None,
+                     hadamard_block: int = 0):
+    """x: (M, K) float -> (q int8 (M,K), scale f32 (M,1)).
+
+    Pipeline (paper §3.2): X <- X / s  (SmoothQuant), X <- X H (rotation),
+    then symmetric per-token quantization (Eq. 2).
+    """
+    t = x.astype(jnp.float32)
+    if smooth is not None:
+        t = t / smooth.astype(jnp.float32)
+    if hadamard_block:
+        t = block_hadamard_matmul(t, hadamard_block)
+    q, scale = qtypes.quantize_act(t, bits=8, granularity="per_token")
+    return q, scale
+
+
+def fused_rmsnorm_quant_ref(x: jax.Array, gamma: jax.Array, eps: float = 1e-6,
+                            smooth: Optional[jax.Array] = None):
+    """Beyond-paper fused epilogue: RMSNorm -> (smooth) -> per-token quant."""
+    xf = x.astype(jnp.float32)
+    rms = jnp.sqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    t = xf / rms * gamma.astype(jnp.float32)
+    if smooth is not None:
+        t = t / smooth.astype(jnp.float32)
+    q, scale = qtypes.quantize_act(t, bits=8, granularity="per_token")
+    return q, scale
+
+
+# ---------------------------------------------------------------------------
+# Block Walsh-Hadamard transform
+# ---------------------------------------------------------------------------
+
+def hadamard_ref(x: jax.Array, block: int = 128) -> jax.Array:
+    return block_hadamard_matmul(x, block)
+
+
+# ---------------------------------------------------------------------------
+# INT8 KV-cache attention helpers (beyond-paper: quantized KV)
+# ---------------------------------------------------------------------------
+
+def kv_dequant_ref(k_q: jax.Array, k_scale: jax.Array) -> jax.Array:
+    """Per (token, head) scales: k_q (..., S, H, D) int8, k_scale (..., S, H, 1)."""
+    return k_q.astype(jnp.float32) * k_scale

@@ -1,0 +1,1 @@
+"""Model zoo: generic pattern-driven decoder stack + block families."""

@@ -1,0 +1,107 @@
+"""Shared model layers: norms, RoPE, MLP variants — all quantization-aware.
+
+Every GEMM goes through `qlinear.apply`, so a PTQ'd parameter tree runs the
+int8/int4 kernels with zero model-code changes. Activation statistics for
+calibration are captured through the `Taps` accumulator threaded through the
+forward pass (absmax per input channel — what SmoothQuant needs).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import qlinear
+from repro.core.quant.qtypes import QuantConfig
+
+
+class Taps:
+    """Per-channel absmax accumulator for calibration (traceable)."""
+
+    def __init__(self, enabled: bool = True):
+        self.enabled = enabled
+        self.data = {}
+
+    def record(self, name: str, x: jax.Array) -> None:
+        if not self.enabled:
+            return
+        red = tuple(range(x.ndim - 1))
+        self.record_absmax(name, jnp.max(jnp.abs(x.astype(jnp.float32)),
+                                         axis=red))
+
+    def record_absmax(self, name: str, am: jax.Array) -> None:
+        """am: (..., K) already-reduced absmax; leading dims are max-merged."""
+        if not self.enabled:
+            return
+        if am.ndim > 1:
+            am = jnp.max(am, axis=tuple(range(am.ndim - 1)))
+        prev = self.data.get(name)
+        self.data[name] = am if prev is None else jnp.maximum(prev, am)
+
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    rms = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * rms * gamma.astype(jnp.float32)).astype(x.dtype)
+
+
+def init_rms_norm(d: int) -> dict:
+    return {"g": jnp.ones((d,), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, D); positions: (S,) or (B, S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                      # (D/2,)
+    ang = positions.astype(jnp.float32)[..., None] * freqs   # (..., S, D/2)
+    if ang.ndim == 2:                                 # (S, D/2) -> broadcast B
+        ang = ang[None]
+    cos = jnp.cos(ang)[:, :, None, :]                 # (B, S, 1, D/2)
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP variants
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d: int, ff: int, act: str) -> dict:
+    k1, k2 = jax.random.split(key)
+    if act == "swiglu":
+        # fused [gate | up] halves in one GEMM
+        return {"w_in": qlinear.init_linear(k1, d, 2 * ff),
+                "w_out": qlinear.init_linear(k2, ff, d)}
+    return {"w_in": qlinear.init_linear(k1, d, ff),
+            "w_out": qlinear.init_linear(k2, ff, d)}
+
+
+def mlp(p: dict, x: jax.Array, act: str,
+        qcfg: Optional[QuantConfig] = None, impl: Optional[str] = None,
+        taps: Optional[Taps] = None, tap_prefix: str = "") -> jax.Array:
+    if taps is not None:
+        taps.record(tap_prefix + "mlp_in", x)
+    h = qlinear.apply(p["w_in"], x, qcfg, impl)
+    if act == "swiglu":
+        gate, up = jnp.split(h, 2, axis=-1)
+        h = jax.nn.silu(gate.astype(jnp.float32)).astype(h.dtype) * up
+    elif act == "squared_relu":
+        h = jnp.square(jax.nn.relu(h))
+    elif act == "gelu":
+        h = jax.nn.gelu(h)
+    else:
+        raise ValueError(act)
+    if taps is not None:
+        taps.record(tap_prefix + "mlp_out", h)
+    return qlinear.apply(p["w_out"], h, qcfg, impl)

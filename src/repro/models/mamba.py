@@ -1,0 +1,153 @@
+"""Mamba-style selective SSM branch (for the Hymba hybrid architecture).
+
+Chunked selective scan: `lax.scan` over chunks of `ssm_chunk` tokens carries
+the (B, d_inner, N) state; within a chunk an associative scan runs in
+parallel. This bounds the materialized (token x d_inner x N) working set to
+one chunk — the TPU-VMEM-conscious adaptation of the CUDA selective-scan
+(DESIGN.md §2): recurrence stays in fast memory, HBM traffic is O(chunk).
+
+Decode is the O(1) single-step recurrence on the carried state. Projections
+(in/out/dt/BC) are quantization-aware; the scan itself runs fp32.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import qlinear
+from repro.models.layers import Taps
+
+
+def init_mamba(key, cfg) -> dict:
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    ks = jax.random.split(key, 6)
+    s = 1.0 / jnp.sqrt(d)
+    p = {
+        "w_in": qlinear.init_linear(ks[0], d, 2 * di),        # [x | z]
+        "w_bcdt": qlinear.init_linear(ks[1], di, 2 * n + 1),  # [B | C | dt]
+        "w_out": qlinear.init_linear(ks[2], di, d),
+        "conv": jax.random.normal(ks[3], (cfg.ssm_conv, di), jnp.float32) * 0.2,
+        "a_log": jnp.log(jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32),
+                                  (di, 1))),                  # (di, N)
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "dt_bias": jnp.full((di,), -4.6, jnp.float32),        # softplus ~ 0.01
+    }
+    return p
+
+
+def _conv1d_causal(x, w):
+    """Depthwise causal conv. x: (B, S, di); w: (K, di)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k))
+    return out
+
+
+def _ssm_inputs(p, xz, cfg, qcfg, impl):
+    """Shared by scan/step: gates + per-token (dt, B, C) from x branch."""
+    di, n = cfg.d_inner, cfg.ssm_state
+    x_raw, z = jnp.split(xz, 2, axis=-1)
+    x = jax.nn.silu(_conv1d_causal(x_raw, p["conv"]).astype(jnp.float32))
+    bcdt = qlinear.apply(p["w_bcdt"], x.astype(xz.dtype), qcfg, impl)
+    bcdt = bcdt.astype(jnp.float32)
+    b_t = bcdt[..., :n]                                   # (B,S,N)
+    c_t = bcdt[..., n:2 * n]
+    dt = jax.nn.softplus(bcdt[..., -1:] + p["dt_bias"])   # (B,S,di) broadcast
+    a = -jnp.exp(p["a_log"])                              # (di, N)
+    return x_raw, x, z, dt, a, b_t, c_t
+
+
+def _scan_chunk(h0, x, dt, a, b_t, c_t):
+    """One chunk in parallel. h0: (B, di, N); x,dt: (B,C,di); b,c: (B,C,N)."""
+    decay = jnp.exp(dt[..., None] * a)                    # (B,C,di,N)
+    drive = (dt * x)[..., None] * b_t[:, :, None, :]      # (B,C,di,N)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a2 * a1, a2 * b1 + b2
+
+    acc_a, acc_b = jax.lax.associative_scan(combine, (decay, drive), axis=1)
+    h = acc_a * h0[:, None] + acc_b                       # (B,C,di,N)
+    y = jnp.einsum("bcdn,bcn->bcd", h, c_t)
+    return h[:, -1], y
+
+
+def mamba_forward(p, x_in, cfg, *, qcfg=None, impl=None,
+                  taps: Optional[Taps] = None, tap_prefix: str = "",
+                  state=None, constraint=None):
+    """x_in: (B, S, d) -> (out (B, S, d), final state dict)."""
+    b, s, _ = x_in.shape
+    di, n = cfg.d_inner, cfg.ssm_state
+    if taps is not None:
+        taps.record(tap_prefix + "mamba_in", x_in)
+    xz = qlinear.apply(p["w_in"], x_in, qcfg, impl)
+    if constraint is not None:
+        xz = jax.lax.with_sharding_constraint(xz, constraint)
+    x_raw, x, z, dt, a, b_t, c_t = _ssm_inputs(p, xz, cfg, qcfg, impl)
+
+    chunk = min(cfg.ssm_chunk, s)
+    if s % chunk:
+        chunk = 1 << (min(s, chunk).bit_length() - 1)
+        while s % chunk:
+            chunk //= 2
+    nc = s // chunk
+    h0 = (state["h"] if state is not None
+          else jnp.zeros((b, di, n), jnp.float32))
+
+    # checkpoint: the (B, chunk, di, N) decay/drive intermediates would
+    # otherwise be stored per chunk for backward (86 GiB/dev at hymba
+    # train_4k); recompute them instead.
+    @jax.checkpoint
+    def body(h, inputs):
+        xc, dtc, bc, cc = inputs
+        h1, y = _scan_chunk(h, xc, dtc, a, bc, cc)
+        return h1, y
+
+    split = lambda t: t.reshape(b, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+    hN, ys = jax.lax.scan(body, h0, (split(x), split(dt), split(b_t),
+                                     split(c_t)))
+    y = ys.swapaxes(0, 1).reshape(b, s, di)
+    y = y + x * p["d_skip"]
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    if taps is not None:
+        taps.record(tap_prefix + "mamba_out", y)
+    out = qlinear.apply(p["w_out"], y.astype(x_in.dtype), qcfg, impl)
+    kc = cfg.ssm_conv - 1
+    buf = jnp.pad(x_raw.astype(jnp.float32), ((0, 0), (kc, 0), (0, 0)))[:, -kc:]
+    return out, {"h": hN, "conv_buf": buf}
+
+
+def mamba_decode(p, x_in, cfg, state, *, qcfg=None, impl=None):
+    """Single-token step. x_in: (B, 1, d); state: dict with h (B,di,N) and
+    conv_buf (B, K-1, di) for the causal conv context."""
+    b = x_in.shape[0]
+    di, n, k = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    xz = qlinear.apply(p["w_in"], x_in, qcfg, impl)
+    x_raw, z = jnp.split(xz, 2, axis=-1)
+    # causal conv over buffered context + current token
+    ctx = jnp.concatenate([state["conv_buf"],
+                           x_raw.astype(jnp.float32)], axis=1)  # (B, K, di)
+    x = jax.nn.silu(jnp.einsum("bkd,kd->bd", ctx.astype(jnp.float32),
+                               p["conv"]))[:, None]
+    bcdt = qlinear.apply(p["w_bcdt"], x.astype(xz.dtype), qcfg, impl)
+    bcdt = bcdt.astype(jnp.float32)
+    b_t, c_t = bcdt[..., :n], bcdt[..., n:2 * n]
+    dt = jax.nn.softplus(bcdt[..., -1:] + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    decay = jnp.exp(dt[:, 0, :, None] * a)                     # (B,di,N)
+    h = decay * state["h"] + (dt[:, 0] * x[:, 0])[..., None] * b_t[:, 0, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, c_t[:, 0])[:, None]
+    y = y + x * p["d_skip"]
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = qlinear.apply(p["w_out"], y.astype(x_in.dtype), qcfg, impl)
+    new_state = {"h": h, "conv_buf": ctx[:, 1:]}
+    return out, new_state
+
+
+def init_mamba_state(cfg, batch: int) -> dict:
+    return {"h": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+            "conv_buf": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner),
+                                  jnp.float32)}

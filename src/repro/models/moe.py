@@ -1,0 +1,191 @@
+"""Mixture-of-Experts FFN (Mixtral-style: top-2 of 8, softmax-renormalized).
+
+Two dispatch implementations:
+  * "dense"    — every token through every expert, gate-weighted sum.
+                 O(E) overcompute; kept as the correctness oracle.
+  * "dropping" — static-shape capacity dispatch (MaxText/MegaBlocks style):
+                 argsort tokens by expert, keep the first C per expert
+                 (C = T*k*cf/E), grouped expert GEMMs, weighted scatter-add
+                 back. Compiles to fixed shapes; dropped tokens contribute 0
+                 (residual passes them through).
+
+Expert weights carry a leading E dim; the quantized path vmaps `qlinear`
+over experts (per-expert scales — the granularity the paper prescribes for
+per-channel weight quantization).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import qlinear
+from repro.models.layers import Taps
+
+
+def _maybe_constrain(x, sharding):
+    """with_sharding_constraint when every named dim divides; the MoE
+    dispatch scatter buffers otherwise replicate per device under GSPMD
+    (200+ GiB/device at mixtral-8x22b train_4k)."""
+    if sharding is None:
+        return x
+    spec = sharding.spec
+    mesh = sharding.mesh
+    if len(spec) > x.ndim:
+        return x
+    for dim, ax in zip(x.shape, spec):
+        if ax is None:
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        if dim % n:
+            return x
+    return jax.lax.with_sharding_constraint(x, sharding)
+
+
+def init_moe(key, cfg) -> dict:
+    d, ff, m = cfg.d_model, cfg.d_ff, cfg.moe
+    e = m.num_experts
+    k1, k2, k3 = jax.random.split(key, 3)
+    n_in = 2 * ff if cfg.act == "swiglu" else ff
+    scale = 1.0 / jnp.sqrt(d)
+    return {
+        "router": {"w": jax.random.normal(k1, (d, e), jnp.float32) * 0.02},
+        "w_in": {"w": jax.random.normal(k2, (e, d, n_in), jnp.float32) * scale},
+        "w_out": {"w": jax.random.normal(k3, (e, ff, d), jnp.float32)
+                  / jnp.sqrt(ff)},
+    }
+
+
+def _expert_ffn(p_in, p_out, x, act, qcfg, impl, constraint=None):
+    """x: (E, C, d) through per-expert FFN -> ((E, C, d), hidden absmax (E, ff)).
+
+    The hidden absmax is the calibration tap for w_out (recorded outside the
+    vmap to keep the Taps accumulator trace-safe). `constraint` is the 2-D
+    (tokens, features) dispatch sharding — it must be re-asserted on the
+    expert *hidden* states or GSPMD all-gathers them to the full ff width
+    (160 GiB/device at mixtral-8x22b train_4k).."""
+    def one(pi, po, xe):
+        h = qlinear.apply(pi, xe, qcfg, impl)
+        h = _maybe_constrain(h, constraint)
+        if act == "swiglu":
+            g, u = jnp.split(h, 2, axis=-1)
+            h = jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype) * u
+        elif act == "squared_relu":
+            h = jnp.square(jax.nn.relu(h))
+        else:
+            h = jax.nn.gelu(h)
+        h = _maybe_constrain(h, constraint)
+        ham = jnp.max(jnp.abs(h.astype(jnp.float32)), axis=0)
+        out = qlinear.apply(po, h, qcfg, impl)
+        return _maybe_constrain(out, constraint), ham
+    return jax.vmap(one)(p_in, p_out, x)
+
+
+def _router(p, x, m):
+    """x: (T, d) -> gates (T, k) f32, ids (T, k) int32, aux load-balance loss."""
+    logits = (x.astype(jnp.float32) @ p["router"]["w"])        # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, ids = jax.lax.top_k(probs, m.top_k)
+    gates = gates / jnp.sum(gates, axis=-1, keepdims=True)
+    # GShard aux loss: E * sum_e mean(prob_e) * mean(assign_e)
+    e = probs.shape[-1]
+    assign = jnp.zeros_like(probs).at[
+        jnp.arange(ids.shape[0])[:, None], ids].set(1.0)
+    aux = e * jnp.sum(jnp.mean(probs, 0) * jnp.mean(assign, 0))
+    return gates, ids, aux
+
+
+def moe_ffn(p: dict, x: jax.Array, cfg, qcfg=None, impl=None,
+            taps: Optional[Taps] = None, tap_prefix: str = "",
+            constraint=None):
+    """x: (B, S, d) -> (out (B, S, d), aux_loss). `constraint`: optional
+    NamedSharding with a (tokens, features) spec for dispatch buffers."""
+    m = cfg.moe
+    b, s, d = x.shape
+    xt = x.reshape(b * s, d)
+    if taps is not None:
+        taps.record(tap_prefix + "mlp_in", xt)
+    gates, ids, aux = _router(p, xt, m)
+    if m.impl == "dense":
+        out = _dense_moe(p, xt, gates, ids, cfg, qcfg, impl, taps, tap_prefix)
+    else:
+        out = _dropping_moe(p, xt, gates, ids, cfg, qcfg, impl, taps,
+                            tap_prefix, constraint)
+    return out.reshape(b, s, d).astype(x.dtype), aux
+
+
+def _expand_expert(constraint):
+    """(tokens, feat) constraint -> (E, capacity, feat) for the expert buf."""
+    if constraint is None:
+        return None
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    spec = constraint.spec
+    return NamedSharding(constraint.mesh, P(None, spec[0], spec[1]))
+
+
+def _expand_vec(constraint):
+    """(tokens, feat) constraint -> (tokens,) for the dispatch index vectors."""
+    if constraint is None:
+        return None
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    return NamedSharding(constraint.mesh, P(constraint.spec[0]))
+
+
+def _dense_moe(p, xt, gates, ids, cfg, qcfg, impl, taps, tap_prefix):
+    m = cfg.moe
+    t = xt.shape[0]
+    # (E, T, d): every expert sees every token (oracle; smoke-test sizes only)
+    xe = jnp.broadcast_to(xt[None], (m.num_experts,) + xt.shape)
+    he, ham = _expert_ffn(p["w_in"], p["w_out"], xe, cfg.act, qcfg, impl)
+    if taps is not None:
+        taps.record_absmax(tap_prefix + "mlp_out", ham)
+    weight = jnp.zeros((t, m.num_experts), jnp.float32).at[
+        jnp.arange(t)[:, None], ids].add(gates)
+    return jnp.einsum("etd,te->td", he.astype(jnp.float32), weight)
+
+
+def _dropping_moe(p, xt, gates, ids, cfg, qcfg, impl, taps, tap_prefix,
+                  constraint=None):
+    m = cfg.moe
+    t, d = xt.shape
+    e, k = m.num_experts, m.top_k
+    cap = int(t * k * m.capacity_factor / e + 0.999)
+    cap = max(8, min(t, -(-cap // 8) * 8))             # round up to 8, <= T
+
+    flat_e = ids.reshape(-1)                           # (T*k,)
+    flat_gate = gates.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(t), k)
+
+    order = jnp.argsort(flat_e, stable=True)
+    se, sg, st = flat_e[order], flat_gate[order], flat_tok[order]
+    counts = jnp.bincount(flat_e, length=e)
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                              jnp.cumsum(counts)[:-1]])
+    rank = jnp.arange(t * k) - starts[se]
+    keep = rank < cap
+    slot = jnp.where(keep, se * cap + rank, e * cap)   # overflow row dropped
+
+    # Shard the (T*k,) dispatch vectors over the token axis: gathers indexed
+    # by replicated index vectors replicate their (T*k, d) outputs.
+    c1 = _expand_vec(constraint)
+    se, sg, st = (_maybe_constrain(a, c1) for a in (se, sg, st))
+    slot = _maybe_constrain(slot, c1)
+    keep = _maybe_constrain(keep, c1)
+
+    buf = jnp.zeros((e * cap + 1, d), xt.dtype).at[slot].set(
+        _maybe_constrain(xt[st], constraint))
+    ebuf = _maybe_constrain(buf[:-1].reshape(e, cap, d),
+                            _expand_expert(constraint))
+    he, ham = _expert_ffn(p["w_in"], p["w_out"], ebuf, cfg.act, qcfg, impl,
+                          constraint)
+    if taps is not None:
+        taps.record_absmax(tap_prefix + "mlp_out", ham)
+    he = _maybe_constrain(he.reshape(e * cap, d), constraint)
+    contrib = he[jnp.minimum(slot, e * cap - 1)] * (sg * keep)[:, None]
+    contrib = _maybe_constrain(contrib, constraint)
+    out = jnp.zeros((t, d), jnp.float32).at[st].add(contrib.astype(jnp.float32))
+    return _maybe_constrain(out, constraint)

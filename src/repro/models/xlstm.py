@@ -1,0 +1,260 @@
+"""xLSTM blocks: mLSTM (matrix memory, exp gating) and sLSTM (scalar memory).
+
+mLSTM trains/prefills in the parallel (quadratic, attention-like) form with
+log-space gate stabilization and decodes through the O(1) recurrent matrix-
+memory update — the two forms are numerically cross-checked in tests.
+sLSTM is inherently sequential (recurrent gate connections) and runs under
+`lax.scan` with exponential-gating stabilizer state.
+
+Projections (up/qkv/down, fused gate input) are quantization-aware; the
+recurrent R matrices and gate nonlinearity stay fp32 (state-fed — outside
+SmoothQuant's calibration model; see DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import qlinear
+from repro.models.layers import Taps, rms_norm
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg) -> dict:
+    d = cfg.d_model
+    dm = cfg.xlstm_proj * d
+    nh = cfg.n_heads
+    ks = jax.random.split(key, 5)
+    return {
+        "w_up": qlinear.init_linear(ks[0], d, 2 * dm),     # [x | z-gate]
+        "w_qkv": qlinear.init_linear(ks[1], dm, 3 * dm),
+        "w_if": qlinear.init_linear(ks[2], dm, 2 * nh, bias=True),
+        "w_down": qlinear.init_linear(ks[3], dm, d),
+        "out_norm": {"g": jnp.ones((dm,), jnp.float32)},
+    }
+
+
+def _mlstm_qkvif(p, xm, cfg, qcfg, impl):
+    nh = cfg.n_heads
+    dm = xm.shape[-1]
+    dh = dm // nh
+    qkv = qlinear.apply(p["w_qkv"], xm, qcfg, impl)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    shp = xm.shape[:-1] + (nh, dh)
+    q, k, v = (t.reshape(shp).astype(jnp.float32) for t in (q, k, v))
+    gates = qlinear.apply(p["w_if"], xm, qcfg, impl).astype(jnp.float32)
+    log_i = gates[..., :nh]                         # i = exp(i~)
+    log_f = jax.nn.log_sigmoid(gates[..., nh:])     # f = sigmoid(f~)
+    return q, k, v, log_i, log_f
+
+
+MLSTM_CHUNK = 1024     # quadratic-form window; beyond it, chunkwise scan
+
+
+def _mlstm_chunk(state, q, k, v, log_i, log_f):
+    """One chunkwise-parallel mLSTM step (the standard xLSTM chunked form).
+
+    state: c (B,nh,dh,dh), n (B,nh,dh), m (B,nh); chunk tensors are
+    (B,L,nh,dh) / (B,L,nh). Intra-chunk uses the stabilized quadratic form;
+    the carried matrix memory contributes the inter-chunk term. With a zero
+    state this reduces exactly to the full parallel form (tests cross-check
+    against the recurrent step)."""
+    c_prev, n_prev, m_prev = state["c"], state["n"], state["m"]
+    bsz, l, nh, dh = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+
+    cum = jnp.cumsum(log_f, axis=1)                       # (B,L,nh)
+    a_t = (log_i - cum).transpose(0, 2, 1)                # (B,nh,L)
+    c_s = cum.transpose(0, 2, 1)                          # (B,nh,L)
+    dmat = c_s[:, :, :, None] + a_t[:, :, None, :]        # (B,nh,L,L)
+    tri = jnp.tril(jnp.ones((l, l), bool))
+    dmat = jnp.where(tri, dmat, -jnp.inf)
+    m_intra = jnp.max(dmat, axis=-1)                      # (B,nh,L)
+    m_inter = m_prev[:, :, None] + c_s                    # (B,nh,L)
+    m_j = jnp.maximum(jnp.maximum(m_intra, m_inter), -1e30)
+    w_dec = jnp.exp(dmat - m_j[..., None])                # (B,nh,L,L)
+    w_inter = jnp.exp(m_inter - m_j)                      # (B,nh,L)
+
+    scores = jnp.einsum("bshd,bthd->bhst", q * scale, k)
+    sw = scores * w_dec
+    num = jnp.einsum("bhst,bthd->bshd", sw, v)            # (B,L,nh,dh)
+    num_inter = jnp.einsum("bhkv,bshk->bshv", c_prev,
+                           (q * scale) * w_inter.transpose(0, 2, 1)[..., None])
+    num = num + num_inter
+    den_intra = jnp.sum(sw, axis=-1)                      # (B,nh,L)
+    den_inter = jnp.einsum("bhk,bshk->bhs", n_prev,
+                           (q * scale) * w_inter.transpose(0, 2, 1)[..., None])
+    den = jnp.maximum(jnp.abs(den_intra + den_inter), jnp.exp(-m_j))
+    h = num / den.transpose(0, 2, 1)[..., None]           # (B,L,nh,dh)
+
+    # end-of-chunk state
+    cum_last = cum[:, -1]                                 # (B,nh)
+    m_tail = jnp.max((log_i - cum) + cum_last[:, None], axis=1)  # (B,nh)
+    m_new = jnp.maximum(m_prev + cum_last, m_tail)
+    m_new = jnp.maximum(m_new, -1e30)
+    w_tail = jnp.exp((log_i - cum) + cum_last[:, None]
+                     - m_new[:, None]).transpose(0, 2, 1)  # (B,nh,L)
+    decay = jnp.exp(m_prev + cum_last - m_new)
+    c_new = decay[..., None, None] * c_prev + \
+        jnp.einsum("bht,bthd,bthe->bhde", w_tail, k, v)
+    n_new = decay[..., None] * n_prev + \
+        jnp.einsum("bht,bthd->bhd", w_tail, k)
+    return {"c": c_new, "n": n_new, "m": m_new}, h
+
+
+def mlstm_parallel(p, x, cfg, *, qcfg=None, impl=None,
+                   taps: Optional[Taps] = None, tap_prefix: str = "",
+                   state=None):
+    """x: (B, S, d) -> (out (B, S, d), final state (c, n, m)).
+
+    Sequences longer than MLSTM_CHUNK run the chunkwise scan — the
+    (B,nh,S,S) quadratic decay matrix at 32k prefill would otherwise
+    materialize 34 GiB/device."""
+    b, s, d = x.shape
+    nh = cfg.n_heads
+    if taps is not None:
+        taps.record(tap_prefix + "up_in", x)
+    up = qlinear.apply(p["w_up"], x, qcfg, impl)
+    xm, z = jnp.split(up, 2, axis=-1)
+    if taps is not None:
+        taps.record(tap_prefix + "qkv_in", xm)
+    q, k, v, log_i, log_f = _mlstm_qkvif(p, xm, cfg, qcfg, impl)
+    dh = q.shape[-1]
+    st = state if state is not None else init_mlstm_state(cfg, b)
+
+    chunk = min(s, MLSTM_CHUNK)
+    while s % chunk:
+        chunk //= 2
+    nc = s // chunk
+    if nc == 1:
+        st, h = _mlstm_chunk(st, q, k, v, log_i, log_f)
+    else:
+        split = lambda t: t.reshape(b, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+        @jax.checkpoint
+        def body(carry, inp):
+            qi, ki, vi, li, lf = inp
+            return _mlstm_chunk(carry, qi, ki, vi, li, lf)
+
+        st, hs = jax.lax.scan(body, st, (split(q), split(k), split(v),
+                                         split(log_i), split(log_f)))
+        h = hs.swapaxes(0, 1).reshape(b, nc * chunk, nh, dh)
+    h = h.reshape(b, s, -1)
+
+    h = rms_norm(h, p["out_norm"]["g"], cfg.norm_eps)
+    h = h * jax.nn.silu(z.astype(jnp.float32)).astype(h.dtype)
+    if taps is not None:
+        taps.record(tap_prefix + "down_in", h)
+    out = qlinear.apply(p["w_down"], h.astype(x.dtype), qcfg, impl)
+    return out, st
+
+
+def mlstm_decode(p, x, cfg, state, *, qcfg=None, impl=None):
+    """x: (B, 1, d); state: c (B,nh,dh,dh_v), n (B,nh,dh), m (B,nh)."""
+    b = x.shape[0]
+    up = qlinear.apply(p["w_up"], x, qcfg, impl)
+    xm, z = jnp.split(up, 2, axis=-1)
+    q, k, v, log_i, log_f = _mlstm_qkvif(p, xm, cfg, qcfg, impl)
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]                   # (B,nh,dh)
+    log_i, log_f = log_i[:, 0], log_f[:, 0]               # (B,nh)
+    dh = q.shape[-1]
+
+    m_new = jnp.maximum(log_f + state["m"], log_i)
+    decay = jnp.exp(log_f + state["m"] - m_new)[..., None]
+    inject = jnp.exp(log_i - m_new)[..., None]
+    c = decay[..., None] * state["c"] + inject[..., None] * \
+        jnp.einsum("bhd,bhe->bhde", k, v)
+    n = decay * state["n"] + inject * k
+    qs = q / jnp.sqrt(jnp.float32(dh))
+    num = jnp.einsum("bhde,bhd->bhe", c, qs)
+    den = jnp.maximum(jnp.abs(jnp.sum(n * qs, axis=-1, keepdims=True)),
+                      jnp.exp(-m_new)[..., None])
+    h = (num / den).reshape(b, 1, -1)
+    h = rms_norm(h, p["out_norm"]["g"], cfg.norm_eps)
+    h = h * jax.nn.silu(z.astype(jnp.float32)).astype(h.dtype)
+    out = qlinear.apply(p["w_down"], h.astype(x.dtype), qcfg, impl)
+    return out, {"c": c, "n": n, "m": m_new}
+
+
+def init_mlstm_state(cfg, batch: int) -> dict:
+    dm = cfg.xlstm_proj * cfg.d_model
+    nh = cfg.n_heads
+    dh = dm // nh
+    return {"c": jnp.zeros((batch, nh, dh, dh), jnp.float32),
+            "n": jnp.zeros((batch, nh, dh), jnp.float32),
+            "m": jnp.full((batch, nh), -1e30, jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg) -> dict:
+    d = cfg.d_model
+    nh = cfg.n_kv_heads or cfg.n_heads
+    dh = d // nh
+    ks = jax.random.split(key, 3)
+    return {
+        "w_in": qlinear.init_linear(ks[0], d, 4 * d, bias=True),  # i,f,z,o
+        "r": jax.random.normal(ks[1], (4, nh, dh, dh), jnp.float32)
+        / jnp.sqrt(dh),
+        "w_out": qlinear.init_linear(ks[2], d, d),
+        "out_norm": {"g": jnp.ones((d,), jnp.float32)},
+    }
+
+
+def slstm_forward(p, x, cfg, *, qcfg=None, impl=None,
+                  taps: Optional[Taps] = None, tap_prefix: str = "",
+                  state=None):
+    """Sequential scan over S. x: (B, S, d) -> (out, final state)."""
+    b, s, d = x.shape
+    nh = cfg.n_kv_heads or cfg.n_heads
+    dh = d // nh
+    if taps is not None:
+        taps.record(tap_prefix + "in", x)
+    zin = qlinear.apply(p["w_in"], x, qcfg, impl).astype(jnp.float32)
+    st = state if state is not None else init_slstm_state(cfg, b)
+
+    def step(carry, z_t):
+        h, c, n, m = carry
+        hh = h.reshape(b, nh, dh)
+        rec = jnp.einsum("gude,bue->bgud", p["r"], hh).reshape(b, 4, d)
+        it = z_t[:, 0 * d:1 * d] + rec[:, 0]
+        ft = z_t[:, 1 * d:2 * d] + rec[:, 1]
+        zt = z_t[:, 2 * d:3 * d] + rec[:, 2]
+        ot = z_t[:, 3 * d:4 * d] + rec[:, 3]
+        m_new = jnp.maximum(ft + m, it)
+        i_s = jnp.exp(it - m_new)
+        f_s = jnp.exp(ft + m - m_new)
+        c_new = f_s * c + i_s * jnp.tanh(zt)
+        n_new = jnp.maximum(f_s * n + i_s, 1e-6)
+        h_new = jax.nn.sigmoid(ot) * c_new / n_new
+        return (h_new, c_new, n_new, m_new), h_new
+
+    carry0 = (st["h"], st["c"], st["n"], st["m"])
+    (hN, cN, nN, mN), hs = jax.lax.scan(step, carry0,
+                                        zin.transpose(1, 0, 2))
+    h_seq = hs.transpose(1, 0, 2)
+    h_seq = rms_norm(h_seq, p["out_norm"]["g"], cfg.norm_eps)
+    if taps is not None:
+        taps.record(tap_prefix + "out", h_seq)
+    out = qlinear.apply(p["w_out"], h_seq.astype(x.dtype), qcfg, impl)
+    return out, {"h": hN, "c": cN, "n": nN, "m": mN}
+
+
+def slstm_decode(p, x, cfg, state, *, qcfg=None, impl=None):
+    out, st = slstm_forward(p, x, cfg, qcfg=qcfg, impl=impl, state=state)
+    return out, st
+
+
+def init_slstm_state(cfg, batch: int) -> dict:
+    d = cfg.d_model
+    return {"h": jnp.zeros((batch, d), jnp.float32),
+            "c": jnp.zeros((batch, d), jnp.float32),
+            "n": jnp.zeros((batch, d), jnp.float32),
+            "m": jnp.full((batch, d), -1e30, jnp.float32)}

@@ -1,0 +1,8 @@
+"""TPU v5e hardware model (per chip) — the roofline denominators."""
+
+PEAK_BF16 = 197e12       # FLOP/s
+PEAK_INT8 = 394e12       # OP/s (MXU int8 = 2x bf16)
+HBM_BW = 819e9           # bytes/s
+ICI_BW = 50e9            # bytes/s per link (assignment-specified)
+VMEM_BYTES = 128 * 2**20 // 8  # ~16 MiB usable
+HBM_BYTES = 16 * 2**30

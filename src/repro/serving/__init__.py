@@ -1,0 +1,2 @@
+from repro.serving.engine import ServingEngine, GenerationResult  # noqa
+from repro.serving import cot, sampling  # noqa

@@ -1,0 +1,83 @@
+"""Chain-of-thought reasoning modes + repetitive-generation analysis.
+
+openPangu-Embedded selects its reasoning mode with a directive appended to
+the prompt (paper §4.1); we mirror that with reserved directive tokens and
+per-mode decode policies:
+
+  slow_think — full reasoning budget (long traces)
+  no_think   — condensed budget (short traces)
+  auto_think — adaptive: budget switches on prompt complexity (length proxy),
+               mirroring the paper's input-dependent switching
+
+The repetition detector implements Figure 4's failure pattern: terminal
+output segments consisting of one phrase repeated until termination.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence
+
+# Reserved directive token ids (top of the vocab is reserved by convention;
+# the synthetic tokenizer never emits ids >= vocab - 8).
+MODE_TOKEN_OFFSET = {"slow_think": 1, "auto_think": 2, "no_think": 3}
+MODES = tuple(MODE_TOKEN_OFFSET)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModePolicy:
+    budget_frac: float      # fraction of max_new_tokens this mode may use
+    min_tokens: int = 1
+
+
+POLICIES = {
+    "slow_think": ModePolicy(budget_frac=1.0),
+    "no_think": ModePolicy(budget_frac=0.25),
+    "auto_think": ModePolicy(budget_frac=-1.0),   # resolved per prompt
+}
+
+
+def mode_token(mode: str, vocab: int) -> int:
+    return vocab - MODE_TOKEN_OFFSET[mode]
+
+
+def apply_mode(prompt: Sequence[int], mode: str, vocab: int) -> List[int]:
+    """Append the CoT directive to the prompt (paper §4.1)."""
+    return list(prompt) + [mode_token(mode, vocab)]
+
+
+def budget_for(mode: str, prompt_len: int, max_new: int,
+               auto_threshold: int = 32) -> int:
+    """Decode budget per mode; auto_think switches slow/no on prompt size."""
+    if mode == "auto_think":
+        mode = "slow_think" if prompt_len >= auto_threshold else "no_think"
+    return max(1, int(max_new * POLICIES[mode].budget_frac))
+
+
+# ---------------------------------------------------------------------------
+# Repetitive generation (Figure 4)
+# ---------------------------------------------------------------------------
+
+def detect_repetition(tokens: Sequence[int], max_phrase: int = 8,
+                      min_repeats: int = 3, min_cover: int = 12) -> bool:
+    """True iff the tail of `tokens` is one phrase (length <= max_phrase)
+    repeated >= min_repeats times covering >= min_cover tokens."""
+    toks = list(tokens)
+    n = len(toks)
+    for p in range(1, max_phrase + 1):
+        if n < max(p * min_repeats, min_cover):
+            continue
+        phrase = toks[n - p:]
+        reps = 1
+        i = n - 2 * p
+        while i >= 0 and toks[i:i + p] == phrase:
+            reps += 1
+            i -= p
+        if reps >= min_repeats and reps * p >= min_cover:
+            return True
+    return False
+
+
+def repetition_rate(generations) -> float:
+    if not generations:
+        return 0.0
+    return sum(detect_repetition(g) for g in generations) / len(generations)

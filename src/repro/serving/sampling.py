@@ -1,0 +1,22 @@
+"""Token samplers for the serving engine (greedy / temperature / top-k)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def greedy(logits, key=None):
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def temperature(logits, key, temp: float = 0.8):
+    return jax.random.categorical(key, logits / temp, axis=-1).astype(jnp.int32)
+
+
+def top_k(logits, key, k: int = 40, temp: float = 0.8):
+    vals, idx = jax.lax.top_k(logits, k)
+    choice = jax.random.categorical(key, vals / temp, axis=-1)
+    return jnp.take_along_axis(idx, choice[..., None], -1)[..., 0].astype(jnp.int32)
+
+
+SAMPLERS = {"greedy": greedy, "temperature": temperature, "top_k": top_k}

@@ -1,0 +1,206 @@
+"""Logical sharding rules with divisibility fallback.
+
+Each parameter/cache leaf is matched by path substring to an ordered list of
+candidate PartitionSpecs; the first spec where every named dim divides the
+leaf's shape is used, else the next, ending at full replication. This is
+what lets one rule table drive 10 architectures whose head counts / vocab /
+widths are not all divisible by the mesh (e.g. qwen2's 12 heads vs 16-way
+model axis: the *flattened* QKV projection output 2048 shards fine; hymba's
+vocab 32001 falls back to d-sharded embedding).
+
+Strategies:
+  fsdp_tp — training + baseline serving: weights 2-D sharded (reduction or
+            vocab dims over the data axes "FSDP", output features over
+            "model"); XLA inserts per-layer all-gathers.
+  ws      — weight-stationary serving: feature dims sharded over the
+            *combined* (data, model) axes, no weight gathering; activations
+            all-reduce instead. The §Perf decode hillclimb compares the two.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.tree_util import keystr
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def fits(mesh: Mesh, spec: P, shape: Tuple[int, ...]) -> bool:
+    if len(spec) > len(shape):
+        return False
+    for dim, axis in zip(shape, spec):
+        if axis is not None and dim % _axis_size(mesh, axis) != 0:
+            return False
+    return True
+
+
+def choose_spec(mesh: Mesh, candidates: Sequence[P],
+                shape: Tuple[int, ...]) -> P:
+    for spec in candidates:
+        if fits(mesh, spec, shape):
+            return spec
+    return P()
+
+
+# ---------------------------------------------------------------------------
+# Rule tables
+# ---------------------------------------------------------------------------
+
+def _dp(mesh: Mesh):
+    """The data-parallel axes present in this mesh ('pod' first if any)."""
+    axes = [a for a in ("pod", "data") if a in mesh.shape]
+    return tuple(axes) if len(axes) > 1 else axes[0]
+
+
+_IN_NAMES = ("wqkv", "wq", "wkv", "w_in", "w_up", "w_qkv", "w_if", "w_bcdt")
+_OUT_NAMES = ("wo", "w_out", "w_down")
+
+
+def _leaf_kind(path: str) -> str:
+    """Classify a parameter leaf by its key path."""
+    if "['embed']" in path:
+        return "embed"
+    if "['lm_head']" in path:
+        return "head"
+    is_expert = "['moe']" in path
+    m = re.search(r"\['(w[a-z_]*)'\]\[", path) or \
+        re.search(r"\['(w[a-z_]*)'\]$", path)
+    name = m.group(1) if m else ""
+    if name in _IN_NAMES:
+        return "expert_in" if is_expert else "in"
+    if name in _OUT_NAMES:
+        return "expert_out" if is_expert else "out"
+    if "['router']" in path:
+        return "router"
+    return "other"
+
+
+def spec_for_param(mesh: Mesh, path: str, shape, strategy: str = "fsdp_tp",
+                   ndim_offset: int = 0) -> P:
+    """PartitionSpec for one parameter leaf. Handles: fp weights (w),
+    quantized payloads (w_q.data — sharded like w; packed K/2 keeps
+    divisibility via even shards), scales, smooth vectors, biases."""
+    dp = _dp(mesh)
+    ws_mode = strategy in ("ws", "ws2", "tp")
+    if ws_mode:
+        if strategy == "tp":
+            feat = "model"               # classic TP: model axis only
+        else:
+            feat = tuple(a for a in ("pod", "data", "model")
+                         if a in mesh.shape)
+        IN = [P(None, feat), P()]
+        if strategy == "ws":
+            OUT = [P(feat, None), P()]   # K-sharded (partial-sum reduce)
+            EOUT = [P(None, feat, None), P()]
+        else:                            # ws2/tp: N-sharded — no s32
+            OUT = [P(None, feat), P()]   # accumulator reduces for int8
+            EOUT = [P(None, None, feat), P()]
+        EIN = [P(None, None, feat), P()]
+        EMB = [P(feat, None), P(None, feat), P()]
+        HEAD = [P(None, feat), P()]
+        VEC1 = [P(feat), P()]
+        COL = [P(None, feat), P()]       # (1|K//g, N)-shaped scales
+    else:
+        IN = [P(dp, "model"), P(dp, None), P(None, "model"), P()]
+        OUT = [P("model", dp), P(None, dp), P("model", None), P()]
+        EIN = [P(None, dp, "model"), P(None, dp, None), P()]
+        EOUT = [P(None, "model", dp), P(None, None, dp), P()]
+        EMB = [P("model", dp), P(None, dp), P(None, "model"), P()]
+        HEAD = [P(dp, "model"), P(dp, None), P()]
+        VEC1 = [P("model"), P()]
+        COL = [P(None, "model"), P()]
+
+    kind = _leaf_kind(path)
+    grouped = "['blocks']" in path          # leading scan-group axis
+    is_expert = kind.startswith("expert")
+
+    def with_group(specs):
+        return [P(None, *s) for s in specs] + [P()] if grouped else specs
+
+    leaf = path.rsplit("[", 1)[-1]
+    if ".data" in path or path.endswith(".data") or "data" == leaf.strip("']"):
+        pass  # QTensor payload falls through to weight rules below
+
+    if kind == "embed":
+        return choose_spec(mesh, EMB, shape)
+    if kind == "head":
+        return choose_spec(mesh, HEAD, shape)
+
+    # scales / smooth / bias vectors
+    if "scale" in path:
+        base = COL if not is_expert else [P(None, *s) for s in COL] + [P()]
+        return choose_spec(mesh, with_group(base), shape)
+    if "smooth" in path:
+        base = [P(None)] if not is_expert else [P(None, None)]
+        return choose_spec(mesh, with_group(base + [P()]), shape)
+    if re.search(r"\['b'\]$", path):
+        return choose_spec(mesh, with_group(VEC1 + [P()]), shape)
+
+    if kind in ("in", "expert_in", "out", "expert_out"):
+        base = {"in": IN, "out": OUT,
+                "expert_in": EIN, "expert_out": EOUT}[kind]
+        return choose_spec(mesh, with_group(base), shape)
+    if kind == "router":
+        return choose_spec(mesh, with_group([P(dp if not ws_mode else None,
+                                               None), P()]), shape)
+    return P()  # norms, gates, conv, recurrent mats: replicated
+
+
+def spec_for_cache(mesh: Mesh, path: str, shape) -> P:
+    """KV caches / SSM states, laid out (G, B, ...): batch over the dp axes
+    and the largest remaining divisible dim over 'model' — for a 32k KV
+    cache that is the *sequence* dim (context-parallel cache), for SSM
+    states the feature dim. A 90B x 32k x 128-request decode cache only
+    fits HBM with both axes sharded."""
+    dp = _dp(mesh)
+    ndim = len(shape)
+    spec = [None] * ndim
+    if ndim >= 2 and shape[1] % _axis_size(mesh, dp) == 0:
+        spec[1] = dp
+    if "model" in mesh.shape and ndim >= 3:
+        nm = mesh.shape["model"]
+        cands = [(shape[i], i) for i in range(2, ndim)
+                 if shape[i] % nm == 0 and shape[i] >= nm]
+        if cands:
+            spec[max(cands)[1]] = "model"
+    return P(*spec)
+
+
+def tree_shardings(mesh: Mesh, tree, kind: str = "param",
+                   strategy: str = "fsdp_tp"):
+    """NamedSharding pytree for params ('param') or caches ('cache')."""
+    def one(path, leaf):
+        p = keystr(path)
+        shape = leaf.shape
+        if kind == "cache":
+            spec = spec_for_cache(mesh, p, shape)
+        else:
+            spec = spec_for_param(mesh, p, shape, strategy)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def batch_shardings(mesh: Mesh, batch):
+    dp = _dp(mesh)
+    def one(leaf):
+        if leaf.ndim >= 1 and leaf.shape[0] % _axis_size(mesh, dp) == 0:
+            return NamedSharding(mesh, P(dp))
+        return NamedSharding(mesh, P())
+    return jax.tree.map(one, batch)
+
+
+def replicated(mesh: Mesh, tree):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)

@@ -1,0 +1,72 @@
+"""Flash-attention kernel vs the model's SDPA reference, swept over
+(shape, GQA ratio, causality, window, dtype) in interpret mode."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attn import flash_attention
+from repro.models import attention as attn
+
+
+def ref_sdpa(q, k, v, causal=True, window=0):
+    s, t = q.shape[1], k.shape[1]
+    if causal:
+        mask = attn.causal_mask(s, window=window, t=t)
+    else:
+        mask = jnp.ones((1, 1, s, t), bool)
+    return attn._sdpa(q.astype(jnp.float32), k.astype(jnp.float32),
+                      v.astype(jnp.float32), mask, None).reshape(
+        q.shape[0], s, q.shape[2], q.shape[3])
+
+
+def make(b, s, t, h, g, d, dtype=jnp.float32, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (b, s, h, d), dtype)
+    k = jax.random.normal(ks[1], (b, t, g, d), dtype)
+    v = jax.random.normal(ks[2], (b, t, g, d), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("b,s,h,g,d,bq,bk", [
+    (1, 128, 4, 4, 64, 64, 64),      # MHA
+    (2, 128, 4, 2, 64, 32, 64),      # GQA 2x
+    (1, 256, 8, 2, 32, 64, 128),     # GQA 4x, rectangular blocks
+    (1, 64, 2, 1, 128, 64, 32),      # MQA
+])
+def test_flash_causal_matches_ref(b, s, h, g, d, bq, bk):
+    q, k, v = make(b, s, s, h, g, d)
+    got = flash_attention(q, k, v, causal=True, bq=bq, bk=bk,
+                          interpret=True)
+    want = ref_sdpa(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_sliding_window():
+    q, k, v = make(1, 256, 256, 4, 2, 32, seed=3)
+    got = flash_attention(q, k, v, causal=True, window=64, bq=64, bk=64,
+                          interpret=True)
+    want = ref_sdpa(q, k, v, causal=True, window=64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_noncausal():
+    q, k, v = make(1, 64, 128, 2, 2, 64, seed=5)
+    got = flash_attention(q, k, v, causal=False, bq=32, bk=64,
+                          interpret=True)
+    want = ref_sdpa(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_bf16_inputs():
+    q, k, v = make(1, 128, 128, 4, 4, 64, dtype=jnp.bfloat16, seed=7)
+    got = flash_attention(q, k, v, causal=True, bq=64, bk=64,
+                          interpret=True)
+    want = ref_sdpa(q, k, v, causal=True)
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-2, atol=2e-2)

@@ -1,0 +1,124 @@
+"""Hypothesis property tests on the quantization core's invariants."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+import hypothesis.extra.numpy as hnp
+
+from repro.core.quant import qtypes, smooth
+from repro.core.quant.hadamard import (block_fwht, block_hadamard_matmul,
+                                       rotate_weight)
+from repro.serving import cot
+
+_settings = settings(max_examples=25, deadline=None)
+
+
+def floats(shape):
+    return hnp.arrays(np.float32, shape,
+                      elements=st.floats(-100, 100, width=32,
+                                         allow_nan=False))
+
+
+# -- quantization error bound -------------------------------------------------
+
+@_settings
+@given(floats((16, 32)), st.sampled_from([4, 8]))
+def test_fake_quant_error_bounded_by_half_scale(x, bits):
+    """|x - Q(x)| <= s/2 + eps for non-clipped values (round-to-nearest)."""
+    xq = np.asarray(qtypes.fake_quant(jnp.asarray(x), bits, axis=None))
+    absmax = np.abs(x).max()
+    s = max(2 * absmax / (2 ** bits - 1), 1e-8)
+    # the extreme elements may clip by one step (paper scale uses 2^n - 1)
+    assert (np.abs(x - xq) <= s + 1e-5).all()
+    inner = np.abs(x) < absmax * (1 - 2 / (2 ** bits))
+    if inner.any():
+        assert (np.abs(x - xq)[inner] <= s / 2 + 1e-5).all()
+
+
+@_settings
+@given(floats((8, 64)))
+def test_quantize_act_idempotent_scaleinvariant(x):
+    """Per-token quantization is invariant to positive per-token scaling
+    (up to 1 level at rounding boundaries — fp division of the scaled pair
+    differs by 1 ulp; and the 1e-8 eps floor breaks it for ~zero rows)."""
+    rows_live = np.abs(x).max(axis=1) > 1e-3
+    q1, s1 = qtypes.quantize_act(jnp.asarray(x))
+    q2, s2 = qtypes.quantize_act(jnp.asarray(x * 4.0))
+    diff = np.abs(np.asarray(q1, np.int32) - np.asarray(q2, np.int32))
+    assert (diff[rows_live] <= 1).all()
+    np.testing.assert_allclose(np.asarray(s2)[rows_live],
+                               (np.asarray(s1) * 4.0)[rows_live], rtol=1e-5)
+
+
+# -- int4 packing roundtrips ----------------------------------------------------
+
+@_settings
+@given(hnp.arrays(np.int8, (32, 16),
+                  elements=st.integers(-8, 7)),
+       st.sampled_from([4, 8, 16, 32]))
+def test_pack_halves_roundtrip(vals, group):
+    packed = qtypes.pack_int4_halves(jnp.asarray(vals), group)
+    assert packed.shape == (16, 16)
+    back = qtypes.unpack_int4_halves(packed, group)
+    np.testing.assert_array_equal(np.asarray(back), vals)
+
+
+@_settings
+@given(hnp.arrays(np.int8, (24, 8), elements=st.integers(-8, 7)))
+def test_pack_interleave_roundtrip(vals):
+    packed = qtypes.pack_int4(jnp.asarray(vals), 0)
+    back = qtypes.unpack_int4(packed, 0, 24)
+    np.testing.assert_array_equal(np.asarray(back), vals)
+
+
+# -- smoothing invariants ---------------------------------------------------------
+
+@_settings
+@given(floats((8, 32)), floats((32, 16)), st.floats(0.1, 0.9))
+def test_smooth_identity_in_fp(x, w, alpha):
+    a_max = np.abs(x).max(0) + 1e-3
+    w_max = np.abs(w).max(1) + 1e-3
+    s = smooth.smooth_scales(jnp.asarray(a_max), jnp.asarray(w_max), alpha)
+    y0 = x @ w
+    y1 = (x / np.asarray(s)) @ np.asarray(
+        smooth.apply_to_weight(jnp.asarray(w), s))
+    np.testing.assert_allclose(y1, y0, rtol=2e-3, atol=2e-3)
+    assert (np.asarray(s) > 0).all()
+
+
+# -- hadamard invariants -----------------------------------------------------------
+
+@_settings
+@given(floats((4, 256)), st.sampled_from([32, 64, 128]))
+def test_fwht_orthogonal_and_norm_preserving(x, block):
+    y = np.asarray(block_fwht(jnp.asarray(x), block))
+    np.testing.assert_allclose(np.linalg.norm(y, axis=1),
+                               np.linalg.norm(x, axis=1), rtol=1e-4)
+    back = np.asarray(block_fwht(jnp.asarray(y), block))
+    np.testing.assert_allclose(back, x, rtol=1e-3, atol=1e-3)
+
+
+@_settings
+@given(floats((8, 128)), floats((128, 32)))
+def test_rotation_preserves_matmul(x, w):
+    xr = block_hadamard_matmul(jnp.asarray(x), 128)
+    wr = rotate_weight(jnp.asarray(w), 128)
+    np.testing.assert_allclose(np.asarray(xr @ wr), x @ w,
+                               rtol=1e-2, atol=1e-2)
+
+
+# -- repetition detector -------------------------------------------------------------
+
+@_settings
+@given(st.lists(st.integers(0, 50), min_size=1, max_size=20),
+       st.integers(1, 6), st.integers(3, 6))
+def test_repetition_detector_finds_planted(prefix, phrase_len, repeats):
+    phrase = list(range(100, 100 + phrase_len))
+    toks = prefix + phrase * max(repeats, (12 // phrase_len) + 1)
+    assert cot.detect_repetition(toks)
+
+
+@_settings
+@given(st.integers(10, 60))
+def test_repetition_detector_clean_on_distinct(n):
+    assert not cot.detect_repetition(list(range(n)))

@@ -1,0 +1,135 @@
+"""End-to-end PTQ: calibrate -> quantize_model -> quantized forward/serving
+across architectures and all four paper configurations."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch, reduced
+from repro.core.quant import INT8, W4A8, W4A8_SMOOTH, W4A8_HADAMARD
+from repro.core.quant import calibrate, ptq
+from repro.models import transformer
+
+
+def setup_model(arch="pangu_1b", seed=0, b=2, s=16):
+    cfg = reduced(get_arch(arch))
+    key = jax.random.PRNGKey(seed)
+    params = transformer.init_params(key, cfg)
+    batches = []
+    for i in range(2):
+        k = jax.random.PRNGKey(100 + i)
+        batch = {}
+        if cfg.frontend == "embeddings":
+            batch["embeds"] = jax.random.normal(k, (b, s, cfg.d_model))
+        else:
+            batch["tokens"] = jax.random.randint(k, (b, s), 0, cfg.vocab)
+        if cfg.frontend == "tokens+image":
+            batch["ctx"] = jax.random.normal(k, (b, cfg.n_ctx_tokens,
+                                                 cfg.d_model))
+        batches.append(batch)
+    return cfg, params, batches
+
+
+@pytest.mark.parametrize("qcfg", [INT8, W4A8, W4A8_SMOOTH, W4A8_HADAMARD],
+                         ids=["int8", "w4a8", "w4a8-smooth", "w4a8-hadamard"])
+@pytest.mark.parametrize("arch", ["pangu_1b", "mixtral_8x7b", "hymba_1_5b",
+                                  "xlstm_350m"])
+def test_ptq_forward_close_to_fp(arch, qcfg):
+    cfg, params, batches = setup_model(arch)
+    stats = calibrate.collect_stats(params, batches, cfg)
+    for k, v in stats.items():
+        assert v.shape == (cfg.n_groups, v.shape[-1]) and (v >= 0).all(), k
+    pq = ptq.quantize_model(params, cfg, qcfg, stats)
+    logits_fp, _ = transformer.forward_train(params, batches[0], cfg,
+                                             remat=False)
+    logits_q, _ = transformer.forward_train(pq, batches[0], cfg, qcfg=qcfg,
+                                            impl="xla", remat=False)
+    assert bool(jnp.isfinite(logits_q).all())
+    p = jax.nn.softmax(logits_fp, -1)
+    logq = jax.nn.log_softmax(logits_q, -1)
+    logp = jax.nn.log_softmax(logits_fp, -1)
+    kl = float(jnp.mean(jnp.sum(p * (logp - logq), -1)))
+    # random-init tiny model: int8 should be near-lossless, w4a8 degraded
+    bound = 0.05 if qcfg.weight_bits == 8 else 1.0
+    assert kl < bound, f"{arch} {qcfg.name}: KL {kl}"
+
+
+def test_ptq_decode_path_runs_quantized():
+    cfg, params, batches = setup_model("pangu_1b")
+    stats = calibrate.collect_stats(params, batches, cfg)
+    pq = ptq.quantize_model(params, cfg, INT8, stats)
+    b, s = 2, 8
+    toks = batches[0]["tokens"][:, :s]
+    logits_pre, caches = transformer.prefill(pq, {"tokens": toks}, cfg,
+                                             max_len=s + 4, qcfg=INT8,
+                                             impl="xla")
+    pos = jnp.full((b,), s, jnp.int32)
+    nxt = jnp.argmax(logits_pre, -1).astype(jnp.int32)
+    logits_dec, caches = transformer.decode_step(pq, caches, nxt, pos, cfg,
+                                                 qcfg=INT8, impl="xla")
+    assert logits_dec.shape == (b, cfg.vocab)
+    assert bool(jnp.isfinite(logits_dec).all())
+
+
+def test_ptq_eval_shape_aot():
+    """PTQ must be eval_shape-able (dry-run uses this to get quantized
+    param specs without materializing 90B weights)."""
+    cfg, params, _ = setup_model("pangu_1b")
+    shapes = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                          params)
+    qshapes = ptq.quantized_param_shapes(shapes, cfg, W4A8_SMOOTH)
+    leaves = jax.tree.leaves(qshapes)
+    assert any(l.dtype == jnp.int8 for l in leaves)
+    # packed int4: w_in of mlp has K=d_model -> data K/2
+    blk = qshapes["blocks"]["0"]["mlp"]["w_in"]["w_q"]
+    assert blk.data.shape[-2] == cfg.d_model // 2
+
+
+def test_paper_claims_int8_vs_w4a8_and_flatness():
+    """Deterministic end-to-end claims from the paper:
+
+    1. Tables 1-2: INT8 is near-lossless while baseline W4A8 degrades
+       significantly (>=10x larger logit error here).
+    2. Figure 1: SmoothQuant and Hadamard preprocessing flatten the
+       channel-wise |x| distribution feeding the quantizer.
+
+    (Scheme *ordering* under W4A8 on trained weights is measured by
+    benchmarks/table2_w4a8.py on a trained model — at tiny random-init
+    scale 4-bit weight noise dominates and the ordering is seed noise.)
+    """
+    cfg, params, batches = setup_model("pangu_1b", seed=3)
+    emb = np.array(params["embed"]["w"], copy=True)
+    rng = np.random.default_rng(7)
+    idx = rng.choice(cfg.d_model, size=cfg.d_model // 8, replace=False)
+    emb[:, idx] *= rng.uniform(30, 80, size=len(idx))  # LLM-like outliers
+    params["embed"]["w"] = jnp.asarray(emb)
+    stats = calibrate.collect_stats(params, batches, cfg)
+    logits_fp, _ = transformer.forward_train(params, batches[0], cfg,
+                                             remat=False)
+
+    errs = {}
+    for name, qcfg in [("int8", INT8), ("w4a8", W4A8)]:
+        pq = ptq.quantize_model(params, cfg, qcfg, stats)
+        lq, _ = transformer.forward_train(pq, batches[0], cfg, qcfg=qcfg,
+                                          impl="xla", remat=False)
+        errs[name] = float(jnp.mean((lq - logits_fp) ** 2))
+    assert errs["int8"] * 10 < errs["w4a8"], errs
+
+    # Figure 1: channel absmax flatness at the first quant site.
+    from repro.core.quant import smooth as sm
+    from repro.core.quant.hadamard import block_hadamard_matmul
+    from repro.models.layers import rms_norm
+    x = rms_norm(params["embed"]["w"][batches[0]["tokens"]].astype(
+        jnp.float32).reshape(-1, cfg.d_model), jnp.ones(cfg.d_model))
+    w = params["blocks"]["0"]["attn"]["wqkv"]["w"][0]
+    s = sm.smooth_scales(jnp.max(jnp.abs(x), 0), jnp.max(jnp.abs(w), 1))
+
+    def flatness(t):  # max/mean of channel absmax (Fig. 1 y-axis shape)
+        am = jnp.max(jnp.abs(t), axis=0)
+        return float(jnp.max(am) / jnp.mean(am))
+
+    f_plain = flatness(x)
+    f_smooth = flatness(x / s)
+    f_had = flatness(block_hadamard_matmul(x, 128))
+    assert f_smooth < f_plain / 2, (f_plain, f_smooth)
+    assert f_had < f_plain / 2, (f_plain, f_had)

@@ -1,0 +1,191 @@
+"""Unit tests for the PTQ core: scales, packing, smooth, hadamard, qlinear."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import (qtypes, smooth, hadamard, qlinear,
+                              QuantConfig, INT8, W4A8, W4A8_SMOOTH,
+                              W4A8_HADAMARD, preset)
+
+
+def rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+# -- scale / quantize -------------------------------------------------------
+
+def test_paper_scale_formula():
+    absmax = jnp.asarray([2.0, 0.0, 10.0])
+    s8 = qtypes.paper_scale(absmax, 8)
+    np.testing.assert_allclose(np.asarray(s8), [4 / 255, 1e-8, 20 / 255],
+                               rtol=1e-6)
+
+
+def test_quantize_weight_per_channel_int8_error_bound():
+    r = rng(1)
+    w = jnp.asarray(r.normal(0, 0.05, (256, 512)), jnp.float32)
+    qt = qtypes.quantize_weight(w, INT8)
+    assert qt.data.dtype == jnp.int8 and qt.scale.shape == (1, 512)
+    err = np.abs(np.asarray(qt.dequantize() - w))
+    bound = np.asarray(qt.scale) * 0.5 + 1e-9
+    assert (err <= bound + 1e-7).all()
+
+
+def test_quantize_weight_w4_group_packed():
+    r = rng(2)
+    w = jnp.asarray(r.normal(0, 0.05, (256, 128)), jnp.float32)
+    qt = qtypes.quantize_weight(w, W4A8)
+    assert qt.data.shape == (128, 128) and qt.layout == "halves"
+    assert qt.scale.shape == (2, 128)
+    assert qt.shape == (256, 128)
+    # unpacked values stay in int4 range
+    u = np.asarray(qt.unpacked())
+    assert u.min() >= -8 and u.max() <= 7
+    err = np.abs(np.asarray(qt.dequantize() - w))
+    # per-group scale * 0.5 bound
+    s = np.asarray(qt.scale).repeat(128, 0)
+    assert (err <= 0.5 * s + 1e-7).all()
+
+
+def test_int4_pack_unpack_interleave_roundtrip():
+    r = rng(3)
+    x = jnp.asarray(r.integers(-8, 8, (64, 32)).astype(np.int8))
+    p = qtypes.pack_int4(x, 0)
+    assert p.shape == (32, 32)
+    np.testing.assert_array_equal(np.asarray(qtypes.unpack_int4(p, 0, 64)),
+                                  np.asarray(x))
+
+
+# -- smooth -----------------------------------------------------------------
+
+def test_smooth_exactness_in_fp():
+    """(X/s)(sW) == XW up to fp error, and smoothing reduces act outliers."""
+    r = rng(4)
+    x = np.asarray(r.normal(0, 1, (64, 128)), np.float32)
+    x[:, 7] *= 50.0  # outlier channel
+    w = np.asarray(r.normal(0, 0.05, (128, 96)), np.float32)
+    a_max = np.abs(x).max(0)
+    w_max = np.abs(w).max(1)
+    s = smooth.smooth_scales(jnp.asarray(a_max), jnp.asarray(w_max), 0.5)
+    y0 = x @ w
+    y1 = (x / np.asarray(s)) @ np.asarray(smooth.apply_to_weight(jnp.asarray(w), s))
+    np.testing.assert_allclose(y1, y0, rtol=1e-4, atol=1e-4)
+    assert np.abs(x / np.asarray(s)).max() < np.abs(x).max() / 3
+
+
+def test_smooth_squared_relu_fold_exact():
+    r = rng(5)
+    x = np.asarray(r.normal(0, 1, (32, 64)), np.float32)
+    w_in = np.asarray(r.normal(0, 0.1, (64, 96)), np.float32)
+    s = np.asarray(rng(6).uniform(0.5, 4.0, (96,)), np.float32)
+    h0 = np.maximum(x @ w_in, 0) ** 2 / s
+    w_in_f = np.asarray(smooth.fold_into_prev_linear_squared_relu(
+        jnp.asarray(w_in), jnp.asarray(s)))
+    h1 = np.maximum(x @ w_in_f, 0) ** 2
+    np.testing.assert_allclose(h1, h0, rtol=1e-4, atol=1e-6)
+
+
+# -- hadamard ---------------------------------------------------------------
+
+def test_hadamard_matrix_orthogonal():
+    for n in (2, 64, 128):
+        h = np.asarray(hadamard.hadamard_matrix(n))
+        np.testing.assert_allclose(h @ h.T, np.eye(n), atol=1e-5)
+
+
+def test_fwht_equals_matmul():
+    r = rng(7)
+    x = jnp.asarray(r.normal(0, 1, (16, 512)), jnp.float32)
+    np.testing.assert_allclose(np.asarray(hadamard.block_fwht(x, 128)),
+                               np.asarray(hadamard.block_hadamard_matmul(x, 128)),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_rotation_preserves_product():
+    r = rng(8)
+    x = jnp.asarray(r.normal(0, 1, (32, 256)), jnp.float32)
+    w = jnp.asarray(r.normal(0, 0.05, (256, 64)), jnp.float32)
+    xr = hadamard.block_hadamard_matmul(x, 128)
+    wr = hadamard.rotate_weight(w, 128)
+    np.testing.assert_allclose(np.asarray(xr @ wr), np.asarray(x @ w),
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_block_size_fallback():
+    assert hadamard.block_size_for(384, 128) == 128
+    assert hadamard.block_size_for(96, 128) == 32
+    assert hadamard.block_size_for(100, 128) == 4
+
+
+# -- qlinear ----------------------------------------------------------------
+
+def _make_qparams(w, cfg, act_absmax=None):
+    p = {}
+    wq_input = jnp.asarray(w)
+    if cfg.smooth:
+        a = jnp.asarray(act_absmax)
+        s = smooth.smooth_scales(a, jnp.max(jnp.abs(wq_input), axis=1), cfg.smooth_alpha)
+        wq_input = smooth.apply_to_weight(wq_input, s)
+        p["smooth"] = s
+    if cfg.hadamard:
+        wq_input = hadamard.rotate_weight(wq_input, cfg.hadamard_block)
+    p["w_q"] = qtypes.quantize_weight(wq_input, cfg)
+    return p
+
+
+@pytest.mark.parametrize("cfg", [INT8, W4A8, W4A8_SMOOTH, W4A8_HADAMARD])
+def test_qlinear_int_matches_fake(cfg):
+    r = rng(9)
+    x = jnp.asarray(r.normal(0, 1, (16, 256)), jnp.float32)
+    w = r.normal(0, 0.05, (256, 128)).astype(np.float32)
+    p = _make_qparams(w, cfg, act_absmax=np.abs(np.asarray(x)).max(0))
+    y_int = qlinear.apply(p, x, cfg, impl="xla")
+    y_fake = qlinear.apply(p, x, cfg, impl="fake")
+    np.testing.assert_allclose(np.asarray(y_int), np.asarray(y_fake),
+                               rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("cfg", [INT8, W4A8_SMOOTH, W4A8_HADAMARD])
+def test_qlinear_close_to_fp(cfg):
+    r = rng(10)
+    x = jnp.asarray(r.normal(0, 1, (64, 512)), jnp.float32)
+    w = r.normal(0, 0.05, (512, 256)).astype(np.float32)
+    p_fp = {"w": jnp.asarray(w)}
+    p_q = _make_qparams(w, cfg, act_absmax=np.abs(np.asarray(x)).max(0))
+    y_fp = qlinear.apply(p_fp, x)
+    y_q = qlinear.apply(p_q, x, cfg, impl="xla")
+    rel = np.linalg.norm(np.asarray(y_q - y_fp)) / np.linalg.norm(np.asarray(y_fp))
+    # 4-bit gaussian weights: expected elementwise SQNR ~= 2*absmax/(15*2*std)
+    # ~= 0.12 relative; 8-bit ~16x finer.
+    assert rel < (0.02 if cfg.weight_bits == 8 else 0.15), rel
+
+
+def test_qlinear_int8_outliers_smooth_helps():
+    """SmoothQuant must reduce W8A8 error on outlier-heavy activations
+    (the paper's Fig. 1 / Table 2 mechanism)."""
+    r = rng(11)
+    x = np.asarray(r.normal(0, 1, (64, 512)), np.float32)
+    x[:, ::37] *= 30.0
+    xj = jnp.asarray(x)
+    w = r.normal(0, 0.05, (512, 256)).astype(np.float32)
+    y_fp = np.asarray(qlinear.apply({"w": jnp.asarray(w)}, xj))
+
+    cfgs = {"plain": W4A8, "smooth": W4A8_SMOOTH, "hadamard": W4A8_HADAMARD}
+    errs = {}
+    for name, cfg in cfgs.items():
+        p = _make_qparams(w, cfg, act_absmax=np.abs(x).max(0))
+        y = np.asarray(qlinear.apply(p, xj, cfg, impl="xla"))
+        errs[name] = np.linalg.norm(y - y_fp) / np.linalg.norm(y_fp)
+    assert errs["smooth"] < errs["plain"], errs
+    assert errs["hadamard"] < errs["plain"], errs
+
+
+def test_qlinear_bias_and_dtype():
+    r = rng(12)
+    x = jnp.asarray(r.normal(0, 1, (8, 128)), jnp.bfloat16)
+    w = r.normal(0, 0.05, (128, 64)).astype(np.float32)
+    p = _make_qparams(w, INT8)
+    p["b"] = jnp.asarray(r.normal(0, 1, (64,)), jnp.float32)
+    y = qlinear.apply(p, x, INT8, impl="xla")
+    assert y.dtype == jnp.bfloat16 and y.shape == (8, 64)
