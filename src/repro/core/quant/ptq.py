@@ -99,8 +99,18 @@ def quantize_model(params: dict, cfg, qcfg: QuantConfig,
             if qcfg.smooth:
                 act_am = jnp.asarray(stats[f"{i}/{tap}"])      # (G, K)
                 w_am = jnp.max(jnp.stack([_w_absmax_per_in(w) for w in ws]), 0)
-                s = jax.vmap(partial(smooth.smooth_scales,
-                                     alpha=qcfg.smooth_alpha))(act_am, w_am)
+                if qcfg.smooth_alpha < 0:      # sentinel: per-site search
+                    # alpha search needs the consuming weight matrix; fold
+                    # expert dims into N and concat all sharing linears.
+                    w_full = jnp.concatenate(
+                        [jnp.moveaxis(w, 1, 2).reshape(
+                            w.shape[0], w.shape[2], -1) if w.ndim == 4 else w
+                         for w in ws], axis=-1)
+                    s = jax.vmap(smooth.smooth_scales_auto)(
+                        act_am, w_am, w_full)
+                else:
+                    s = jax.vmap(partial(smooth.smooth_scales,
+                                         alpha=qcfg.smooth_alpha))(act_am, w_am)
             for pth, leaf in zip(paths, leaves):
                 new_leaf = {k: v for k, v in leaf.items() if k != "w"}
                 new_leaf["w_q"] = _quantize_leaf(leaf["w"], s, qcfg)

@@ -78,6 +78,8 @@ FP16 = None  # sentinel: no quantization
 INT8 = QuantConfig(weight_bits=8, act_bits=8)
 W4A8 = QuantConfig(weight_bits=4, act_bits=8, weight_granularity="per_group")
 W4A8_SMOOTH = dataclasses.replace(W4A8, smooth=True)
+# smooth_alpha < 0: per-site migration-strength search (smooth.search_alpha)
+W4A8_SMOOTH_AUTO = dataclasses.replace(W4A8, smooth=True, smooth_alpha=-1.0)
 W4A8_HADAMARD = dataclasses.replace(W4A8, hadamard=True)
 
 PRESETS = {
@@ -87,6 +89,7 @@ PRESETS = {
     "w8a8": INT8,
     "w4a8": W4A8,
     "w4a8-smooth": W4A8_SMOOTH,
+    "w4a8-smooth-auto": W4A8_SMOOTH_AUTO,
     "w4a8-hadamard": W4A8_HADAMARD,
 }
 

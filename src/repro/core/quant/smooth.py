@@ -32,6 +32,51 @@ def smooth_scales(act_absmax: jax.Array, w_absmax: jax.Array,
     return jnp.maximum(s, eps)
 
 
+DEFAULT_ALPHA_GRID = tuple(0.3 + 0.05 * i for i in range(13))   # 0.3 .. 0.9
+
+
+def search_alpha(act_absmax: jax.Array, w_absmax: jax.Array,
+                 w: jax.Array, alphas=DEFAULT_ALPHA_GRID,
+                 eps: float = 1e-5) -> jax.Array:
+    """Per-site migration strength (scalar alpha, pure jnp — vmap/jit safe).
+
+    SmoothQuant's alpha trades activation-channel difficulty against weight
+    difficulty; the right value is model-dependent (0.5 for most OPTs, 0.75+
+    for models with harder activation outliers). Activation difficulty is the
+    channel-absmax flatness max/mean of a/s (per-token dynamic quantization
+    sees the cross-channel spread directly). Weight difficulty needs the full
+    matrix: per-output-channel quantization absorbs any common scale, so what
+    hurts is the spread of *column* absmax after the row scaling S W. We pick
+    the grid point minimizing the worse of the two flatness ratios — the
+    balance point where neither side dominates the quantizer's range (the
+    paper's Fig. 1 claim holds at this tuned alpha, not necessarily at 0.5).
+
+    w: (K, N) the (concatenated) weight(s) consuming this activation.
+    """
+    a = jnp.maximum(act_absmax.astype(jnp.float32), eps)
+    wv = jnp.maximum(w_absmax.astype(jnp.float32), eps)
+    wf = w.astype(jnp.float32)
+
+    def objective(alpha):
+        s = jnp.power(a, alpha) / jnp.power(wv, 1.0 - alpha)
+        act_side = a / s
+        fa = jnp.max(act_side) / jnp.mean(act_side)
+        col_am = jnp.max(jnp.abs(wf) * s[:, None], axis=0)      # (N,)
+        col_am = jnp.maximum(col_am, eps)
+        fw = jnp.max(col_am) / jnp.mean(col_am)
+        return jnp.maximum(fa, fw)
+
+    grid = jnp.asarray(alphas, jnp.float32)
+    return grid[jnp.argmin(jax.vmap(objective)(grid))]
+
+
+def smooth_scales_auto(act_absmax: jax.Array, w_absmax: jax.Array,
+                       w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """smooth_scales with per-site searched migration strength."""
+    alpha = search_alpha(act_absmax, w_absmax, w, eps=eps)
+    return smooth_scales(act_absmax, w_absmax, alpha=alpha, eps=eps)
+
+
 def apply_to_weight(w: jax.Array, s: jax.Array) -> jax.Array:
     """W <- S W (rows scaled by s). w: (K, N), s: (K,)."""
     return (w.astype(jnp.float32) * s[:, None]).astype(w.dtype)

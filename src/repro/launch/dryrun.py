@@ -392,7 +392,7 @@ def main():
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--quant", default="int8",
                     choices=["fp16", "bf16", "int8", "w4a8", "w4a8-smooth",
-                             "w4a8-hadamard"])
+                             "w4a8-smooth-auto", "w4a8-hadamard"])
     ap.add_argument("--strategy", default="fsdp_tp",
                     choices=["fsdp_tp", "ws", "ws2", "tp"])
     ap.add_argument("--kv-bits", type=int, default=16, choices=[8, 16])

@@ -3,6 +3,11 @@ requests across the three CoT reasoning modes.
 
     PYTHONPATH=src python -m repro.launch.serve --arch pangu-1b --reduced \
         --quant int8 --requests 8 --max-new 24
+
+Continuous batching over the paged (optionally int8) KV cache:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch pangu-1b --reduced \
+        --engine continuous --kv-bits 8 --page-size 16 --max-batch 8
 """
 from __future__ import annotations
 
@@ -18,7 +23,7 @@ from repro.configs import get_arch, reduced
 from repro.core.quant import calibrate, preset, ptq
 from repro.data import DataConfig, SyntheticLM, make_prompts
 from repro.models import transformer
-from repro.serving import ServingEngine
+from repro.serving import ContinuousBatchingEngine, ServingEngine
 
 
 def main(argv=None):
@@ -27,8 +32,15 @@ def main(argv=None):
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--quant", default="int8",
                     choices=["fp16", "int8", "w4a8", "w4a8-smooth",
-                             "w4a8-hadamard"])
+                             "w4a8-smooth-auto", "w4a8-hadamard"])
     ap.add_argument("--kv-bits", type=int, default=16, choices=[8, 16])
+    ap.add_argument("--engine", default="batch",
+                    choices=["batch", "continuous"])
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--max-seq-len", type=int, default=256)
+    ap.add_argument("--paged-impl", default="xla",
+                    choices=["xla", "pallas", "pallas_interpret"])
     ap.add_argument("--ckpt-dir", default=None,
                     help="restore trained weights (else random init)")
     ap.add_argument("--requests", type=int, default=8)
@@ -62,10 +74,28 @@ def main(argv=None):
         print(f"[serve] PTQ ({args.quant}) done in {time.time() - t0:.1f}s; "
               f"calibrated on {args.calib_batches} batches")
 
-    eng = ServingEngine(params, cfg, qcfg=qcfg, impl=impl,
-                        kv_bits=args.kv_bits)
     prompts = make_prompts(DataConfig(vocab=cfg.vocab, seq_len=64),
                            args.requests, args.prompt_len)
+    if args.engine == "continuous":
+        eng = ContinuousBatchingEngine(
+            params, cfg, qcfg=qcfg, impl=impl, kv_bits=args.kv_bits,
+            page_size=args.page_size, max_batch=args.max_batch,
+            max_seq_len=args.max_seq_len, paged_impl=args.paged_impl)
+        mode = "slow_think" if args.mode == "all" else args.mode
+        t0 = time.time()
+        res = eng.run(prompts, mode=mode, max_new=args.max_new)
+        dt = time.time() - t0
+        total = sum(len(t) for t in res.tokens)
+        print(f"[serve] continuous: {args.requests} requests, {total} tokens "
+              f"in {dt:.1f}s ({total / dt:.1f} tok/s), "
+              f"{res.steps_run} decode steps, {res.evictions} evictions, "
+              f"KV {eng.kv_bytes_per_token():.0f} B/token")
+        for i, toks in enumerate(res.tokens[:4]):
+            print(f"[serve] req {i}: {len(toks)} tokens: {toks[:16]}")
+        return 0
+
+    eng = ServingEngine(params, cfg, qcfg=qcfg, impl=impl,
+                        kv_bits=args.kv_bits)
     t0 = time.time()
     if args.mode == "all":
         study = eng.cot_study(prompts, max_new=args.max_new)

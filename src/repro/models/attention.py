@@ -350,6 +350,35 @@ def attn_decode(p, x, cfg, cache: dict, pos: jax.Array, *,
     return out, cache
 
 
+def attn_decode_paged(p, x, cfg, pool: dict, page_table: jax.Array,
+                      pos: jax.Array, *, qcfg: Optional[QuantConfig] = None,
+                      impl=None, paged_impl: str = "xla"):
+    """Decode step against the paged (optionally int8) KV pool.
+
+    x: (B, 1, d); pos: (B,) absolute write position (== tokens already in
+    cache); pool: one block's page pool (serving/kv_pool.py layout);
+    page_table: (B, W) physical page ids. paged_impl selects the gather
+    path: "xla" (jnp gather oracle) or "pallas"/"pallas_interpret" (the
+    scalar-prefetch streaming kernel). Returns (out (B,1,d), pool)."""
+    # Lazy imports: repro.serving imports this module at package init.
+    from repro.kernels import paged_attn
+    from repro.serving import kv_pool
+    q, k, v = _qkv(p, x, cfg, pos[:, None], qcfg, impl, None, "")
+    pool = kv_pool.write_token(pool, page_table, pos, k[:, 0], v[:, 0])
+    kv_len = jnp.maximum(pos + 1, 1)      # dead slots attend scratch page 0
+    ks, vs = pool.get("k_s"), pool.get("v_s")
+    if paged_impl in ("pallas", "pallas_interpret"):
+        out = paged_attn.paged_decode_attention(
+            q[:, 0], pool["k"], pool["v"], ks, vs, page_table, kv_len,
+            interpret=paged_impl == "pallas_interpret")
+    else:
+        out = paged_attn.paged_decode_attention_ref(
+            q[:, 0], pool["k"], pool["v"], ks, vs, page_table, kv_len)
+    out = out.reshape(x.shape[0], 1, -1).astype(x.dtype)
+    out = qlinear.apply(p["wo"], out, qcfg, impl)
+    return out, pool
+
+
 def cross_decode(p, x, cfg, cache: dict, *, qcfg=None, impl=None):
     """Cross-attn at decode: context K/V precomputed at prefill."""
     nq, hd = cfg.n_heads, cfg.hd

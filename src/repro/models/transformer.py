@@ -460,6 +460,67 @@ def decode_step(params, caches, token_or_embed, pos, cfg, *, qcfg=None,
     return logits, new_caches
 
 
+# ---------------------------------------------------------------------------
+# Paged decode (continuous-batching serving path)
+# ---------------------------------------------------------------------------
+
+PAGED_PATTERNS = ("self", "moe")
+
+
+def supports_paged(cfg) -> bool:
+    return (all(b in PAGED_PATTERNS for b in cfg.pattern)
+            and cfg.sliding_window == 0 and cfg.frontend == "tokens")
+
+
+def init_paged_pools(cfg, n_pages: int, page_size: int, kv_bits: int = 16,
+                     dtype=jnp.bfloat16) -> dict:
+    """Per-block page pools with the (G, ...) stacked structure the decode
+    scan expects (mirrors init_caches)."""
+    from repro.serving import kv_pool   # serving imports models at init
+    assert supports_paged(cfg), \
+        f"paged decode supports patterns {PAGED_PATTERNS}, full attention"
+    pools = {}
+    for i, _ in enumerate(cfg.pattern):
+        one = kv_pool.init_pool(cfg, n_pages, page_size, kv_bits, dtype)
+        pools[str(i)] = jax.tree.map(
+            lambda l: jnp.broadcast_to(l[None], (cfg.n_groups,) + l.shape),
+            one)
+    return pools
+
+
+def decode_step_paged(params, pools, page_table, tokens, pos, cfg, *,
+                      qcfg=None, impl=None, paged_impl: str = "xla",
+                      dtype=jnp.bfloat16):
+    """One decode step against paged KV pools. tokens: (B,) int32; pos: (B,)
+    absolute write positions (inactive slots: 0 with a scratch page-table
+    row). Returns (logits (B,V) f32, pools)."""
+    x = params["embed"]["w"].astype(dtype)[tokens][:, None, :]
+
+    def body(x, scanned):
+        gp, gpool = scanned
+        new = {}
+        for i, btype in enumerate(cfg.pattern):
+            p = gp[str(i)]
+            h = rms_norm(x, p["ln1"]["g"], cfg.norm_eps)
+            a, pool = attn.attn_decode_paged(
+                p["attn"], h, cfg, gpool[str(i)], page_table, pos,
+                qcfg=qcfg, impl=impl, paged_impl=paged_impl)
+            x = x + a
+            h = rms_norm(x, p["ln2"]["g"], cfg.norm_eps)
+            if btype == "moe":
+                m, _ = moe_mod.moe_ffn(p["moe"], h, cfg, qcfg, impl)
+                x = x + m
+            else:
+                x = x + mlp(p["mlp"], h, cfg.act, qcfg, impl)
+            new[str(i)] = pool
+        return x, new
+
+    x, new_pools = jax.lax.scan(body, x, (params["blocks"], pools))
+    x = rms_norm(x, params["final_norm"]["g"], cfg.norm_eps)
+    logits = _lm_logits(params, x, cfg)[:, 0]
+    return logits, new_pools
+
+
 def init_caches(params, cfg, batch: int, max_len: int, kv_bits: int = 16):
     """Zero caches with the right per-group stacked structure."""
     caches = {}

@@ -1,2 +1,3 @@
-from repro.serving.engine import ServingEngine, GenerationResult  # noqa
-from repro.serving import cot, sampling  # noqa
+from repro.serving.engine import (ServingEngine, GenerationResult,  # noqa
+                                  ContinuousBatchingEngine, ContinuousResult)
+from repro.serving import cot, kv_pool, sampling, scheduler  # noqa

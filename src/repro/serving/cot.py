@@ -15,7 +15,7 @@ output segments consisting of one phrase repeated until termination.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence
+from typing import List, Optional, Sequence
 
 # Reserved directive token ids (top of the vocab is reserved by convention;
 # the synthetic tokenizer never emits ids >= vocab - 8).
@@ -51,6 +51,29 @@ def budget_for(mode: str, prompt_len: int, max_new: int,
     if mode == "auto_think":
         mode = "slow_think" if prompt_len >= auto_threshold else "no_think"
     return max(1, int(max_new * POLICIES[mode].budget_frac))
+
+
+@dataclasses.dataclass(frozen=True)
+class StopPolicy:
+    """Per-request stop condition for the continuous-batching scheduler.
+
+    The three think modes collapse to this: a mode is nothing but a prompt
+    directive plus a (budget, eos) stop policy fed to the same scheduler."""
+    budget: int
+    eos_id: Optional[int] = None
+
+    def done(self, generated: Sequence[int]) -> bool:
+        if self.eos_id is not None and generated \
+                and generated[-1] == self.eos_id:
+            return True
+        return len(generated) >= self.budget
+
+
+def policy_for(mode: str, prompt_len: int, max_new: int,
+               eos_id: Optional[int] = None,
+               auto_threshold: int = 32) -> StopPolicy:
+    return StopPolicy(budget_for(mode, prompt_len, max_new, auto_threshold),
+                      eos_id)
 
 
 # ---------------------------------------------------------------------------

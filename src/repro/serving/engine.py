@@ -1,18 +1,25 @@
-"""Batched serving engine: padded-prefill + decode loop with per-request
-lengths, EOS early-exit, CoT mode policies, and quantized execution.
+"""Serving engines: the legacy padded-batch engine and the continuous-
+batching engine over the paged, optionally int8-quantized KV pool.
 
-The engine drives the same `transformer.prefill` / `decode_step` functions
-the dry-run lowers; jit caching keys on (arch, quant config, impl, batch
-geometry). Continuous-batching-lite: requests are packed left-aligned into
-fixed batch slots with a per-request `lengths` vector; decode steps advance
-per-request positions independently, so heterogeneous prompt lengths share
-one compiled step.
+`ServingEngine` (legacy): requests are packed left-aligned into fixed batch
+slots with a per-request `lengths` vector against dense per-slot caches;
+the whole batch enters and leaves together.
+
+`ContinuousBatchingEngine` (tentpole): a PagedScheduler admits/evicts
+requests *each step* into fixed batch slots; KV lives in fixed-size pages
+(serving/kv_pool.py) handed out from a free list, so memory scales with
+tokens actually held rather than slots x max_len, and finished sequences'
+pages are immediately reusable. The three CoT think modes are just
+different (directive token, stop policy) pairs feeding the same scheduler
+(cot.StopPolicy). Decode runs one jitted `transformer.decode_step_paged`
+over all slots; prefill runs per admission at page-bucketed lengths and is
+scattered into pages.
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -20,6 +27,7 @@ import numpy as np
 
 from repro.models import transformer
 from repro.serving import cot, sampling
+from repro.serving.scheduler import PagedScheduler, Request
 
 
 @dataclasses.dataclass
@@ -123,3 +131,183 @@ class ServingEngine:
                 "repetition_rate": cot.repetition_rate(r.tokens),
             }
         return results
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching over the paged KV pool
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ContinuousResult:
+    tokens: List[List[int]]          # generated tokens, submission order
+    modes: List[str]
+    prompt_lens: List[int]
+    steps_run: int                   # batched decode steps
+    decode_tokens: int               # tokens produced by decode steps
+    evictions: int
+
+
+class ContinuousBatchingEngine:
+    """Continuous-batching inference over a paged, optionally int8 KV cache.
+
+    max_batch slots x ceil(max_seq_len / page_size) page-table columns; the
+    pool defaults to full occupancy (every slot can reach max_seq_len) —
+    pass a smaller n_pages to exercise preemption. Greedy sampling (the
+    deterministic serving path the paper's CoT study measures).
+    """
+
+    def __init__(self, params, cfg, *, qcfg=None, impl=None, kv_bits=16,
+                 page_size: int = 16, max_batch: int = 8,
+                 max_seq_len: int = 256, n_pages: Optional[int] = None,
+                 eos_id: Optional[int] = None, dtype=jnp.bfloat16,
+                 paged_impl: str = "xla"):
+        assert transformer.supports_paged(cfg), (
+            f"paged decode needs full attention over token inputs: "
+            f"pattern={cfg.pattern} (supported {transformer.PAGED_PATTERNS}),"
+            f" sliding_window={cfg.sliding_window} (need 0), "
+            f"frontend={cfg.frontend!r} (need 'tokens')")
+        self.params = params
+        self.cfg = cfg
+        self.page_size = page_size
+        self.eos_id = eos_id
+        self.max_pages_per_seq = -(-max_seq_len // page_size)
+        if n_pages is None:
+            n_pages = 1 + max_batch * self.max_pages_per_seq
+        self.pools = transformer.init_paged_pools(
+            cfg, n_pages, page_size, kv_bits, dtype)
+        self.sched = PagedScheduler(
+            n_slots=max_batch, n_pages=n_pages, page_size=page_size,
+            max_pages_per_seq=self.max_pages_per_seq)
+        self._last_tok = np.zeros(max_batch, np.int32)
+        self._requests: Dict[int, Request] = {}
+        self._policies: Dict[int, cot.StopPolicy] = {}
+        self._next_rid = 0
+        self.steps_run = 0
+        self.decode_tokens = 0
+
+        self._prefill = jax.jit(
+            partial(transformer.prefill, cfg=cfg, qcfg=qcfg, impl=impl,
+                    kv_bits=16, dtype=dtype),
+            static_argnames=("max_len",))
+        self._decode = jax.jit(
+            partial(transformer.decode_step_paged, cfg=cfg, qcfg=qcfg,
+                    impl=impl, paged_impl=paged_impl, dtype=dtype))
+        self._sample = jax.jit(lambda lg: jnp.argmax(lg, -1).astype(jnp.int32))
+
+        def to_pages(pools, caches, page_rows, lengths):
+            from repro.serving import kv_pool
+            new = dict(pools)
+            for i, c in caches.items():
+                new[i] = jax.vmap(kv_pool.write_prefill,
+                                  in_axes=(0, 0, 0, None, None))(
+                    pools[i], c["k"], c["v"], page_rows, lengths)
+            return new
+
+        self._to_pages = jax.jit(to_pages)
+
+    # -- accounting -----------------------------------------------------------
+
+    def kv_bytes_per_token(self) -> float:
+        """Whole-model KV bytes per token slot (pages + scales, all blocks
+        and groups)."""
+        from repro.serving import kv_pool
+        n_pages = self.sched.alloc.n_pages
+        return sum(kv_pool.pool_bytes(p) for p in self.pools.values()) \
+            / (n_pages * self.page_size)
+
+    # -- request lifecycle ----------------------------------------------------
+
+    def submit(self, prompt: Sequence[int], *, mode: str = "slow_think",
+               max_new: int = 32) -> int:
+        full = cot.apply_mode(prompt, mode, self.cfg.vocab)
+        need = -(-len(full) // self.page_size)
+        if need > self.sched.alloc.n_pages - 1:
+            raise ValueError("prompt larger than the whole page pool")
+        budget = cot.budget_for(mode, len(full), max_new)
+        cap = self.max_pages_per_seq * self.page_size
+        if len(full) + budget > cap:
+            raise ValueError(
+                f"prompt ({len(full)}) + budget ({budget}) exceeds "
+                f"max_seq_len {cap}; raise max_seq_len or lower max_new")
+        rid = self._next_rid
+        self._next_rid += 1
+        req = Request(rid=rid, prompt=full, mode=mode, budget=budget)
+        self._requests[rid] = req
+        self._policies[rid] = cot.policy_for(mode, len(full), max_new,
+                                             eos_id=self.eos_id)
+        self.sched.submit(req)
+        return rid
+
+    def _prefill_one(self, slot: int, req: Request) -> None:
+        page = self.page_size
+        n = len(req.prompt)
+        need = -(-n // page)
+        bucket = need * page
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :n] = req.prompt
+        lens = jnp.asarray([n], jnp.int32)
+        logits, caches = self._prefill(
+            self.params, {"tokens": jnp.asarray(toks), "lengths": lens},
+            max_len=bucket)
+        rows = jnp.asarray(self.sched.page_table[slot:slot + 1, :need])
+        self.pools = self._to_pages(self.pools, caches, rows, lens)
+        tok = int(np.asarray(self._sample(logits))[0])
+        req.out.append(tok)
+        self._last_tok[slot] = tok
+        if self._policies[req.rid].done(req.out):
+            self.sched.complete(slot)
+
+    def step(self) -> bool:
+        """One engine step: admit + prefill, ensure pages, batched decode.
+        Returns whether any progress was made (admission or decode)."""
+        sched = self.sched
+        progressed = False
+        while True:
+            # re-admit after prefill-time completions free their slots
+            admitted = sched.admit()
+            if not admitted:
+                break
+            progressed = True
+            for slot, req in admitted:
+                self._prefill_one(slot, req)
+        sched.ensure_decode_capacity()
+        if not sched.active:
+            return progressed
+        logits, self.pools = self._decode(
+            self.params, self.pools, jnp.asarray(sched.page_table),
+            jnp.asarray(self._last_tok), jnp.asarray(sched.lengths))
+        self.steps_run += 1
+        nxt = np.asarray(self._sample(logits))
+        for slot in list(sched.active):
+            req = sched.active[slot]
+            sched.lengths[slot] += 1
+            tok = int(nxt[slot])
+            req.out.append(tok)
+            self._last_tok[slot] = tok
+            self.decode_tokens += 1
+            if self._policies[req.rid].done(req.out):
+                sched.complete(slot)
+        return True
+
+    def run(self, prompts: Sequence[Sequence[int]], *,
+            mode: str = "slow_think", max_new: int = 32,
+            max_steps: int = 100_000) -> ContinuousResult:
+        rids = [self.submit(p, mode=mode, max_new=max_new) for p in prompts]
+        steps0, tokens0 = self.steps_run, self.decode_tokens
+        evict0 = self.sched.n_evictions
+        steps = 0
+        while not self.sched.idle:
+            progressed = self.step()
+            steps += 1
+            if steps > max_steps:
+                raise RuntimeError("continuous engine exceeded max_steps")
+            if not progressed and not self.sched.idle:
+                raise RuntimeError("scheduler stalled with pending work")
+        reqs = [self._requests[r] for r in rids]
+        return ContinuousResult(
+            tokens=[r.out for r in reqs],
+            modes=[r.mode for r in reqs],
+            prompt_lens=[len(r.prompt) for r in reqs],
+            steps_run=self.steps_run - steps0,
+            decode_tokens=self.decode_tokens - tokens0,
+            evictions=self.sched.n_evictions - evict0)

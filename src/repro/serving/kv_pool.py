@@ -1,0 +1,201 @@
+"""Paged KV cache: a fixed pool of fixed-size pages with per-page int8
+quantization (per-head scales) and free-list reuse.
+
+Layout per transformer block (leading scan-group axis G added by
+`transformer.init_paged_pools`):
+
+    k, v   : (P, page_size, n_kv_heads, head_dim)   int8 | cache dtype
+    k_s,v_s: (P, n_kv_heads) float32                (int8 pools only)
+
+Physical page 0 is reserved as the *scratch page*: unassigned page-table
+entries point at it, so every gather/scatter stays shape-static and
+branch-free — writes to it are garbage sinks, reads from it are masked by
+`kv_lengths`. The host-side `PageAllocator` hands out pages 1..P-1.
+
+Quantization is per (page, kv-head): one f32 scale covers page_size tokens,
+so the scale overhead amortizes to 4/page_size bytes per token per head —
+the int8 pool lands at ~50% of the bf16 pool's bytes/token instead of the
+~56% a per-token-scale layout costs at small head_dim. Decode writes land
+one token at a time: the target page is gathered, dequantized, masked to
+the tokens actually written so far (freed pages are reused without
+zeroing), extended, and requantized against the updated per-head absmax.
+That re-rounding is bounded by the final page scale and touches only
+page_size tokens per step — O(page) work against the attention's O(T).
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quant.qtypes import paper_scale
+
+SCRATCH_PAGE = 0
+
+
+# ---------------------------------------------------------------------------
+# Host-side allocator
+# ---------------------------------------------------------------------------
+
+class PageAllocator:
+    """Free-list over physical pages 1..n_pages-1 (page 0 is scratch)."""
+
+    def __init__(self, n_pages: int):
+        assert n_pages >= 2, "need at least one allocatable page + scratch"
+        self.n_pages = n_pages
+        self._free: List[int] = list(range(n_pages - 1, 0, -1))
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """n pages or None (all-or-nothing; no partial allocations)."""
+        if n > len(self._free):
+            return None
+        out = [self._free.pop() for _ in range(n)]
+        return out
+
+    def free(self, pages) -> None:
+        for p in pages:
+            assert p != SCRATCH_PAGE, "freeing the scratch page"
+            self._free.append(int(p))
+
+
+# ---------------------------------------------------------------------------
+# Device-side pool (single block, no G axis; callers vmap/scan over G)
+# ---------------------------------------------------------------------------
+
+def init_pool(cfg, n_pages: int, page_size: int, kv_bits: int = 16,
+              dtype=jnp.bfloat16) -> dict:
+    nkv, hd = cfg.n_kv_heads, cfg.hd
+    shape = (n_pages, page_size, nkv, hd)
+    if kv_bits == 8:
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_s": jnp.zeros((n_pages, nkv), jnp.float32),
+                "v_s": jnp.zeros((n_pages, nkv), jnp.float32)}
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def pool_is_quantized(pool: dict) -> bool:
+    return pool["k"].dtype == jnp.int8
+
+
+def pool_bytes(pool: dict) -> int:
+    return sum(int(np.prod(a.shape)) * a.dtype.itemsize
+               for a in jax.tree.leaves(pool))
+
+
+def bytes_per_token(pool: dict) -> float:
+    """Pool bytes per token *slot* (both K and V, incl. scale overhead)."""
+    n_pages, page = pool["k"].shape[0], pool["k"].shape[1]
+    return pool_bytes(pool) / (n_pages * page)
+
+
+def _quantize_pages(x: jax.Array):
+    """x: (..., page, nkv, hd) -> (int8 pages, per (page, head) scale)."""
+    am = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=(-3, -1))   # (..., nkv)
+    s = paper_scale(am, 8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / s[..., None, :, None]),
+                 -128, 127).astype(jnp.int8)
+    return q, s
+
+
+# -- prefill: bulk page fill -------------------------------------------------
+
+def write_prefill(pool: dict, k: jax.Array, v: jax.Array,
+                  page_rows: jax.Array, lengths: jax.Array) -> dict:
+    """Scatter a prompt's K/V into its pages.
+
+    k, v: (B, S, nkv, hd) with S % page_size == 0 (prompt bucket);
+    page_rows: (B, S // page_size) physical ids (scratch-padded);
+    lengths: (B,) valid prompt tokens — positions beyond are zeroed so they
+    can't inflate the page scale.
+    """
+    page = pool["k"].shape[1]
+    b, s, nkv, hd = k.shape
+    assert s % page == 0, (s, page)
+    valid = (jnp.arange(s)[None, :] < lengths[:, None])[..., None, None]
+    kz = jnp.where(valid, k, 0).reshape(b, s // page, page, nkv, hd)
+    vz = jnp.where(valid, v, 0).reshape(b, s // page, page, nkv, hd)
+    ids = page_rows.reshape(-1)
+    pool = dict(pool)
+    if pool_is_quantized(pool):
+        kq, ks = _quantize_pages(kz)
+        vq, vs = _quantize_pages(vz)
+        pool["k"] = pool["k"].at[ids].set(kq.reshape(-1, page, nkv, hd))
+        pool["v"] = pool["v"].at[ids].set(vq.reshape(-1, page, nkv, hd))
+        pool["k_s"] = pool["k_s"].at[ids].set(ks.reshape(-1, nkv))
+        pool["v_s"] = pool["v_s"].at[ids].set(vs.reshape(-1, nkv))
+    else:
+        dt = pool["k"].dtype
+        pool["k"] = pool["k"].at[ids].set(
+            kz.reshape(-1, page, nkv, hd).astype(dt))
+        pool["v"] = pool["v"].at[ids].set(
+            vz.reshape(-1, page, nkv, hd).astype(dt))
+    return pool
+
+
+# -- decode: one token per sequence ------------------------------------------
+
+def _requant_page(pages_f, new_tok, slot):
+    """pages_f: (B, page, nkv, hd) f32 (already dequantized + masked);
+    new_tok: (B, nkv, hd); slot: (B,) write slot. Returns (q, scale)."""
+    b = pages_f.shape[0]
+    pages_f = pages_f.at[jnp.arange(b), slot].set(
+        new_tok.astype(jnp.float32))
+    return _quantize_pages(pages_f)
+
+
+def write_token(pool: dict, page_table: jax.Array, pos: jax.Array,
+                k: jax.Array, v: jax.Array) -> dict:
+    """Write one token per sequence at absolute position `pos` (B,).
+
+    page_table: (B, W) physical ids; k, v: (B, nkv, hd). Inactive slots
+    should carry pos=0 with a scratch-zeroed page-table row.
+    """
+    page = pool["k"].shape[1]
+    b = k.shape[0]
+    pidx = pos // page
+    slot = pos % page
+    phys = page_table[jnp.arange(b), pidx]                      # (B,)
+    pool = dict(pool)
+    if pool_is_quantized(pool):
+        # Gather page, dequantize, zero not-yet-written slots (pages are
+        # reused without zeroing), extend, requantize per (page, head).
+        live = jnp.arange(page)[None, :, None, None] <= slot[:, None, None,
+                                                            None]
+        for name, s_name, tok in (("k", "k_s", k), ("v", "v_s", v)):
+            pg = pool[name][phys].astype(jnp.float32)           # (B,page,..)
+            sc = pool[s_name][phys]                             # (B,nkv)
+            pg = jnp.where(live, pg * sc[:, None, :, None], 0.0)
+            q, s_new = _requant_page(pg, tok, slot)
+            pool[name] = pool[name].at[phys].set(q)
+            pool[s_name] = pool[s_name].at[phys].set(s_new)
+    else:
+        dt = pool["k"].dtype
+        idx = (phys, slot)
+        pool["k"] = pool["k"].at[idx].set(k.astype(dt))
+        pool["v"] = pool["v"].at[idx].set(v.astype(dt))
+    return pool
+
+
+# -- reads -------------------------------------------------------------------
+
+def gather_kv(pool: dict, page_table: jax.Array):
+    """Dequantized gather: (B, W*page, nkv, hd) bf16 pair — the XLA
+    reference read path (the Pallas kernel streams pages instead)."""
+    page = pool["k"].shape[1]
+    b, w = page_table.shape
+    out = []
+    for name, s_name in (("k", "k_s"), ("v", "v_s")):
+        pages = pool[name][page_table]                  # (B, W, page, nkv, hd)
+        if pool_is_quantized(pool):
+            sc = pool[s_name][page_table]               # (B, W, nkv)
+            pages = pages.astype(jnp.float32) * sc[:, :, None, :, None]
+        out.append(pages.reshape(b, w * page, *pages.shape[3:])
+                   .astype(jnp.bfloat16))
+    return out[0], out[1]

@@ -1,0 +1,149 @@
+"""Continuous-batching scheduler over the paged KV pool.
+
+Host-side control plane: requests wait in a FIFO, get admitted into one of
+`n_slots` fixed batch slots when a slot and enough pages for their prompt
+are free, and release everything on completion. Decode capacity is ensured
+every step: a sequence crossing a page boundary gets a fresh page from the
+free list; when the pool is exhausted the most-recently-admitted other
+request is preempted (recompute-style: its pages are freed and it requeues
+at the front of the FIFO, generation restarting from the prompt — the
+vLLM-style answer to fragmentation-free oversubscription).
+
+The device never sees any of this: it gets a dense (n_slots, W) page table,
+per-slot lengths, and last tokens. Inactive slots carry length 0 and a
+scratch-zeroed page-table row, so their (masked, unused) lanes stay
+shape-static in the jitted decode step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.serving.kv_pool import PageAllocator, SCRATCH_PAGE
+
+
+@dataclasses.dataclass
+class Request:
+    """One in-flight request. The stop condition (budget + eos) is owned by
+    the engine as a cot.StopPolicy; budget here is bookkeeping only."""
+    rid: int
+    prompt: List[int]               # directive token already appended
+    mode: str
+    budget: int
+    out: List[int] = dataclasses.field(default_factory=list)
+    preemptions: int = 0
+
+
+class PagedScheduler:
+    def __init__(self, *, n_slots: int, n_pages: int, page_size: int,
+                 max_pages_per_seq: int):
+        self.n_slots = n_slots
+        self.page_size = page_size
+        self.max_pages_per_seq = max_pages_per_seq
+        self.alloc = PageAllocator(n_pages)
+        self.page_table = np.full((n_slots, max_pages_per_seq), SCRATCH_PAGE,
+                                  np.int32)
+        self.lengths = np.zeros(n_slots, np.int32)      # tokens in cache
+        self.seq_pages: List[List[int]] = [[] for _ in range(n_slots)]
+        self.active: Dict[int, Request] = {}
+        self.waiting: Deque[Request] = deque()
+        self.free_slots: List[int] = list(range(n_slots - 1, -1, -1))
+        self._admit_order: Dict[int, int] = {}          # slot -> seqno
+        self._admit_seq = 0
+        self.n_evictions = 0
+
+    # -- queue ---------------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        need = -(-len(req.prompt) // self.page_size)
+        if need > self.max_pages_per_seq:
+            raise ValueError(
+                f"prompt needs {need} pages > max_pages_per_seq "
+                f"{self.max_pages_per_seq}")
+        self.waiting.append(req)
+
+    @property
+    def idle(self) -> bool:
+        return not self.active and not self.waiting
+
+    # -- admission -----------------------------------------------------------
+
+    def admit(self) -> List[Tuple[int, Request]]:
+        """Admit FIFO-head requests while a slot + prompt pages are free."""
+        admitted = []
+        while self.waiting and self.free_slots:
+            req = self.waiting[0]
+            need = -(-len(req.prompt) // self.page_size)
+            pages = self.alloc.alloc(need)
+            if pages is None:
+                break
+            self.waiting.popleft()
+            slot = self.free_slots.pop()
+            self.seq_pages[slot] = pages
+            self.page_table[slot, :] = SCRATCH_PAGE
+            self.page_table[slot, :need] = pages
+            self.lengths[slot] = len(req.prompt)
+            self.active[slot] = req
+            self._admit_order[slot] = self._admit_seq
+            self._admit_seq += 1
+            admitted.append((slot, req))
+        return admitted
+
+    # -- decode capacity -----------------------------------------------------
+
+    def ensure_decode_capacity(self) -> List[Request]:
+        """Each active slot writes position lengths[slot] this step; grow its
+        page list across page boundaries, preempting if the pool is dry.
+        Returns the preempted (requeued) requests."""
+        evicted = []
+        for slot in sorted(list(self.active)):
+            if slot not in self.active:        # evicted by an earlier slot
+                continue
+            pidx = int(self.lengths[slot]) // self.page_size
+            if pidx >= self.max_pages_per_seq:
+                raise RuntimeError(
+                    f"sequence in slot {slot} exceeded max_pages_per_seq")
+            while pidx >= len(self.seq_pages[slot]):
+                page = self.alloc.alloc(1)
+                if page is None:
+                    victim = self._pick_victim(exclude=slot)
+                    if victim is None:
+                        raise RuntimeError(
+                            "KV pool too small for a single sequence")
+                    evicted.append(self._preempt(victim))
+                    continue
+                self.seq_pages[slot].append(page[0])
+                self.page_table[slot, pidx] = page[0]
+        return evicted
+
+    def _pick_victim(self, exclude: int) -> Optional[int]:
+        cands = [s for s in self.active if s != exclude]
+        if not cands:
+            return None
+        return max(cands, key=lambda s: self._admit_order[s])
+
+    def _release(self, slot: int) -> Request:
+        req = self.active.pop(slot)
+        self.alloc.free(self.seq_pages[slot])
+        self.seq_pages[slot] = []
+        self.page_table[slot, :] = SCRATCH_PAGE
+        self.lengths[slot] = 0
+        self._admit_order.pop(slot, None)
+        self.free_slots.append(slot)
+        return req
+
+    def _preempt(self, slot: int) -> Request:
+        req = self._release(slot)
+        req.out = []                 # recompute preemption: restart cleanly
+        req.preemptions += 1
+        self.n_evictions += 1
+        self.waiting.appendleft(req)
+        return req
+
+    # -- completion ----------------------------------------------------------
+
+    def complete(self, slot: int) -> Request:
+        return self._release(slot)

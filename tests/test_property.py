@@ -2,6 +2,10 @@
 import numpy as np
 import jax
 import jax.numpy as jnp
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (see requirements.txt)")
 from hypothesis import given, settings, strategies as st
 import hypothesis.extra.numpy as hnp
 

@@ -122,7 +122,12 @@ def test_paper_claims_int8_vs_w4a8_and_flatness():
     x = rms_norm(params["embed"]["w"][batches[0]["tokens"]].astype(
         jnp.float32).reshape(-1, cfg.d_model), jnp.ones(cfg.d_model))
     w = params["blocks"]["0"]["attn"]["wqkv"]["w"][0]
-    s = sm.smooth_scales(jnp.max(jnp.abs(x), 0), jnp.max(jnp.abs(w), 1))
+    a_am, w_am = jnp.max(jnp.abs(x), 0), jnp.max(jnp.abs(w), 1)
+    # Fig. 1's halved-flatness claim holds for the *tuned* migration
+    # strength (SmoothQuant's alpha is model-dependent); alpha=0.5 on this
+    # synthetic outlier model under-migrates (act flatness stays ~5x while
+    # the weight side sits near 1.7 — free headroom).
+    s = sm.smooth_scales(a_am, w_am, alpha=sm.search_alpha(a_am, w_am, w))
 
     def flatness(t):  # max/mean of channel absmax (Fig. 1 y-axis shape)
         am = jnp.max(jnp.abs(t), axis=0)
@@ -133,3 +138,8 @@ def test_paper_claims_int8_vs_w4a8_and_flatness():
     f_had = flatness(block_hadamard_matmul(x, 128))
     assert f_smooth < f_plain / 2, (f_plain, f_smooth)
     assert f_had < f_plain / 2, (f_plain, f_had)
+    # The searched alpha must still produce scales the weight side absorbs:
+    # per-output-channel quantization cares about the spread of column
+    # absmax after S W (migration balance, Eq. 3).
+    f_w = flatness(w * s[:, None])
+    assert f_w < f_plain / 2, (f_plain, f_w)
