@@ -21,14 +21,16 @@ the gather; its correctness is what's gated here.
 from __future__ import annotations
 
 import argparse
+import importlib.util
+import os
 import sys
 import time
 
 import jax
 import numpy as np
 
-sys.path.insert(0, __import__("os").path.join(
-    __import__("os").path.dirname(__file__), "..", "src"))
+if importlib.util.find_spec("repro") is None:       # script run w/o PYTHONPATH
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.configs import get_arch, reduced            # noqa: E402
 from repro.data import DataConfig, make_prompts        # noqa: E402

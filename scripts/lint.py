@@ -1,0 +1,15 @@
+#!/usr/bin/env python
+"""Repo entry point for the quantlint checker (== python -m repro.analysis).
+
+    python scripts/lint.py [paths...] [--no-flow] [--list-rules]
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "..", "src"))
+
+from repro.analysis.__main__ import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())

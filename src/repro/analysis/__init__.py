@@ -1,0 +1,21 @@
+"""quantlint: quantization-invariant static checker.
+
+Two complementary passes (see README "Static analysis"):
+  * `astlint` — AST rules over the repo source (pallas compiler-params via
+    the version shim, no magic quant-range literals, no float64, interpret
+    escape hatches), with a pluggable rule registry and per-line/per-file
+    suppression comments.
+  * `dtype_flow` — jaxpr abstract interpretation of representative
+    quantized graphs (int8/W4A8 GEMM contracts, paged-attention dequant,
+    the PTQ-swapped transformer block, the serving decode step) asserting
+    int32 accumulation, scale-applied-exactly-once, and no silent packed
+    int4 upcasts.
+
+CLI: `python -m repro.analysis [paths...]` (or `scripts/lint.py`); wired as
+a blocking stage in `scripts/ci.sh`.
+"""
+from repro.analysis.findings import Finding, render_report  # noqa: F401
+from repro.analysis.astlint import (RULES, lint_file, lint_paths,  # noqa: F401
+                                    rule)
+from repro.analysis.dtype_flow import (FLOW_RULES, TraceSpec,  # noqa: F401
+                                       check_suite, check_trace)

@@ -1,0 +1,62 @@
+"""CLI for the quantlint checker.
+
+    python -m repro.analysis [paths...]          # AST lint + dtype-flow
+    python -m repro.analysis src --no-flow       # AST rules only
+    python -m repro.analysis --flow-only         # jaxpr dtype-flow only
+    python -m repro.analysis --list-rules
+    python -m repro.analysis src --json          # machine-readable findings
+
+Exit status: 0 if no findings, 1 otherwise (CI gates on this).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro.analysis",
+        description="quantization-invariant static checker (quantlint)")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="files/directories to AST-lint (default: src)")
+    ap.add_argument("--rules", nargs="*", default=None,
+                    help="subset of AST rule ids to run")
+    ap.add_argument("--no-flow", action="store_true",
+                    help="skip the jaxpr dtype-flow pass")
+    ap.add_argument("--flow-only", action="store_true",
+                    help="run only the jaxpr dtype-flow pass")
+    ap.add_argument("--fast-flow", action="store_true",
+                    help="dtype-flow on kernel contracts only (skip the "
+                         "model-level traces)")
+    ap.add_argument("--list-rules", action="store_true")
+    ap.add_argument("--json", action="store_true",
+                    help="emit findings as JSON")
+    args = ap.parse_args(argv)
+
+    from repro.analysis import astlint, findings as fmod
+
+    if args.list_rules:
+        from repro.analysis.dtype_flow import FLOW_RULES
+        for r in astlint.RULES.values():
+            print(f"[ast]  {r.id:24s} {r.summary}")
+        for rid, summary in FLOW_RULES.items():
+            print(f"[flow] {rid:24s} {summary}")
+        return 0
+
+    all_findings = []
+    if not args.flow_only:
+        paths = args.paths or ["src"]
+        all_findings.extend(astlint.lint_paths(paths, rules=args.rules))
+    if not args.no_flow:
+        from repro.analysis.dtype_flow import check_suite
+        from repro.analysis.suite import default_specs
+        all_findings.extend(check_suite(default_specs(fast=args.fast_flow)))
+
+    print(fmod.render_report(all_findings,
+                             fmt="json" if args.json else "text"))
+    return 1 if all_findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

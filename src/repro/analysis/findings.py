@@ -1,0 +1,39 @@
+"""Finding records and report rendering for the quantlint checker.
+
+A `Finding` is one rule violation, pointing at a file/line (AST rules) or a
+traced-graph equation (dtype-flow rules; `line == 0` and `path` names the
+trace). Reports group findings by path and end with a per-rule tally so CI
+logs show at a glance which invariant regressed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from collections import Counter
+from typing import Iterable, List
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Finding:
+    path: str          # repo-relative file, or "<trace:name>" for jaxpr rules
+    line: int          # 1-based; 0 for trace-level findings
+    rule: str          # registry id, e.g. "magic-quant-literal"
+    message: str
+
+    def format(self) -> str:
+        loc = f"{self.path}:{self.line}" if self.line else self.path
+        return f"{loc}: [{self.rule}] {self.message}"
+
+
+def render_report(findings: Iterable[Finding], *, fmt: str = "text") -> str:
+    fs: List[Finding] = sorted(findings)
+    if fmt == "json":
+        return json.dumps([dataclasses.asdict(f) for f in fs], indent=2)
+    if not fs:
+        return "quantlint: 0 findings"
+    lines = [f.format() for f in fs]
+    tally = Counter(f.rule for f in fs)
+    lines.append("")
+    lines.append(f"quantlint: {len(fs)} finding(s) — "
+                 + ", ".join(f"{r}: {n}" for r, n in sorted(tally.items())))
+    return "\n".join(lines)

@@ -1,0 +1,203 @@
+"""Representative quantized graphs for the dtype-flow checker.
+
+Each builder returns a `TraceSpec` over the *real* production code paths:
+the kernel ref oracles (the numerical contract the Pallas kernels are
+pinned to), the jitted Pallas kernels themselves (structural int8-accum
+check inside the kernel bodies), the PTQ-swapped transformer block, and the
+paged-serving decode step — the same path `benchmarks/bench_serving.py`
+drives through the continuous-batching engine.
+
+Input tagging is automatic for pytree arguments (`auto_tags`): QTensor
+leaves tag as quant data / per-channel scales, int8 pool pages as quant
+data, `k_s`/`v_s`/`*scale*` float leaves as scales.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.dtype_flow import TraceSpec
+from repro.core.quant.qtypes import QTensor
+
+_KEY_ENTRIES = jax.tree_util
+
+
+def _key_name(key) -> str:
+    for attr in ("key", "name", "idx"):
+        if hasattr(key, attr):
+            return str(getattr(key, attr))
+    return str(key)
+
+
+def _resolve(obj, keys):
+    """Walk a key path (minus the final key) back into the original tree."""
+    for k in keys:
+        try:
+            if hasattr(k, "key"):
+                obj = obj[k.key]
+            elif hasattr(k, "idx"):
+                obj = obj[k.idx]
+            elif hasattr(k, "name"):
+                obj = getattr(obj, k.name)
+            else:
+                return None
+        except Exception:
+            return None
+    return obj
+
+
+def auto_tags(args: tuple, overrides: Dict[int, str] = None) -> Dict[int, str]:
+    """Flat-leaf-index -> tag for the quant contract of `args`."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(args)
+    tags: Dict[int, str] = {}
+    for i, (path, leaf) in enumerate(flat):
+        last = _key_name(path[-1]) if path else ""
+        parent = _resolve(args, path[:-1]) if path else None
+        if isinstance(parent, QTensor):
+            if last == "data":
+                tags[i] = "packed" if parent.is_packed else "quant"
+            elif last == "scale":
+                tags[i] = "scale"
+            continue
+        dtype = getattr(leaf, "dtype", None)
+        if dtype == jnp.int8:
+            tags[i] = "quant"
+        elif (dtype is not None and jnp.issubdtype(dtype, jnp.floating)
+              and ("scale" in last or last in ("k_s", "v_s"))):
+            tags[i] = "scale"
+    if overrides:
+        tags.update(overrides)
+    return tags
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Kernel-contract graphs
+# ---------------------------------------------------------------------------
+
+def spec_int8_gemm() -> TraceSpec:
+    from repro.kernels import ref
+    args = (_sds((16, 128), jnp.int8), _sds((128, 64), jnp.int8),
+            _sds((16, 1), jnp.float32), _sds((1, 64), jnp.float32))
+    return TraceSpec("int8_gemm", ref.int8_matmul_ref, args,
+                     {0: "quant", 1: "quant", 2: "scale", 3: "scale"})
+
+
+def spec_int8_gemm_kernel() -> TraceSpec:
+    from repro.kernels import int8_gemm
+    args = (_sds((32, 128), jnp.int8), _sds((128, 128), jnp.int8),
+            _sds((32, 1), jnp.float32), _sds((1, 128), jnp.float32))
+    return TraceSpec("int8_gemm_pallas",
+                     partial(int8_gemm.int8_matmul, bm=32, bn=128, bk=128),
+                     args, {0: "quant", 1: "quant", 2: "scale", 3: "scale"})
+
+
+def spec_w4a8_gemm() -> TraceSpec:
+    from repro.kernels import ref
+    args = (_sds((8, 256), jnp.int8), _sds((128, 64), jnp.int8),
+            _sds((8, 1), jnp.float32), _sds((2, 64), jnp.float32))
+    return TraceSpec("w4a8_gemm",
+                     partial(ref.w4a8_matmul_ref, group_size=128), args,
+                     {0: "quant", 1: "packed", 2: "scale", 3: "scale"})
+
+
+def spec_w4a8_gemm_kernel() -> TraceSpec:
+    from repro.kernels import w4a8_gemm
+    args = (_sds((32, 256), jnp.int8), _sds((128, 128), jnp.int8),
+            _sds((32, 1), jnp.float32), _sds((2, 128), jnp.float32))
+    return TraceSpec("w4a8_gemm_pallas",
+                     partial(w4a8_gemm.w4a8_matmul, group_size=128,
+                             bm=32, bn=128),
+                     args, {0: "quant", 1: "packed", 2: "scale", 3: "scale"})
+
+
+def spec_paged_attn_dequant() -> TraceSpec:
+    from repro.kernels import paged_attn
+    b, nq, nkv, hd, page, n_pages, w = 2, 4, 2, 32, 8, 5, 2
+    args = (_sds((b, nq, hd), jnp.float32),
+            _sds((n_pages, page, nkv, hd), jnp.int8),
+            _sds((n_pages, page, nkv, hd), jnp.int8),
+            _sds((n_pages, nkv), jnp.float32),
+            _sds((n_pages, nkv), jnp.float32),
+            _sds((b, w), jnp.int32), _sds((b,), jnp.int32))
+    return TraceSpec("paged_attn_dequant",
+                     paged_attn.paged_decode_attention_ref, args,
+                     {1: "quant", 2: "quant", 3: "scale", 4: "scale"})
+
+
+# ---------------------------------------------------------------------------
+# Model-level graphs
+# ---------------------------------------------------------------------------
+
+def _tiny_ptq_model(qname: str = "int8"):
+    from repro.configs import get_arch, reduced
+    from repro.core.quant import calibrate, ptq
+    from repro.core.quant.qtypes import preset
+    from repro.models import transformer
+    cfg = reduced(get_arch("pangu_1b"))
+    qcfg = preset(qname)
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    batch = {"tokens": jnp.asarray(
+        np.arange(2 * 8, dtype=np.int32).reshape(2, 8) % cfg.vocab)}
+    stats = calibrate.collect_stats(params, [batch], cfg)
+    pq = ptq.quantize_model(params, cfg, qcfg, stats)
+    return cfg, qcfg, pq, batch
+
+
+def spec_ptq_block(qname: str = "int8") -> TraceSpec:
+    """The PTQ-swapped transformer block: quantize-act -> int GEMM ->
+    dequant epilogue inside the scanned block stack (impl="xla")."""
+    from repro.models import transformer
+    cfg, qcfg, pq, batch = _tiny_ptq_model(qname)
+
+    def fwd(params, batch):
+        logits, _ = transformer.forward_train(params, batch, cfg, qcfg=qcfg,
+                                              impl="xla", remat=False)
+        return logits
+
+    args = (pq, batch)
+    return TraceSpec(f"ptq_block_{qname}", fwd, args, auto_tags(args))
+
+
+def spec_serving_decode() -> TraceSpec:
+    """The paged serving decode step (the path bench_serving.py measures):
+    int8 page pools + per-(page, head) scales through decode_step_paged."""
+    from repro.configs import get_arch, reduced
+    from repro.models import transformer
+    cfg = reduced(get_arch("pangu_1b"))
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    b, page, n_pages, w = 2, 8, 5, 2
+    pools = transformer.init_paged_pools(cfg, n_pages, page, kv_bits=8)
+    page_table = jnp.ones((b, w), jnp.int32)
+    tokens = jnp.zeros((b,), jnp.int32)
+    pos = jnp.zeros((b,), jnp.int32)
+
+    def step(params, pools, page_table, tokens, pos):
+        logits, _ = transformer.decode_step_paged(
+            params, pools, page_table, tokens, pos, cfg, paged_impl="xla")
+        return logits
+
+    args = (params, pools, page_table, tokens, pos)
+    return TraceSpec("serving_decode", step, args, auto_tags(args))
+
+
+def default_specs(*, fast: bool = False) -> List[TraceSpec]:
+    specs = [
+        spec_int8_gemm(),
+        spec_int8_gemm_kernel(),
+        spec_w4a8_gemm(),
+        spec_w4a8_gemm_kernel(),
+        spec_paged_attn_dequant(),
+    ]
+    if not fast:
+        specs.append(spec_ptq_block("int8"))
+        specs.append(spec_ptq_block("w4a8"))
+        specs.append(spec_serving_decode())
+    return specs

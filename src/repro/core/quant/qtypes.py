@@ -2,7 +2,18 @@
 
 Implements the paper's symmetric scheme (Eq. 1-2):
     s    = 2*max(|X|) / (2^n - 1)
-    Xbar = clamp(round(X / s), -2^(n-1), 2^(n-1) - 1)
+    Xbar = clamp(round(X / s), qmin(n), qmax(n))
+
+**Canonical clip range.** The repo-wide symmetric range is the *narrow*
+one: [qmin(n), qmax(n)] = [-(2^(n-1) - 1), 2^(n-1) - 1], i.e. [-127, 127]
+for int8 and [-7, 7] for int4 — the paper-faithful W8A8 weight range. The
+grid stays sign-symmetric (dequantization commutes with negation) and
+int8 x int8 products keep 1 spare bit of int32 headroom. The two's-
+complement storage minimum (-128 / -8) is available as `qmin_storage(n)`
+but is *not* a valid quantized value; earlier revisions mixed both ranges
+across files, which is exactly the silent-divergence class of bug the
+`repro.analysis` checker now rejects (magic-quant-literal rule: all call
+sites must go through `qmin(bits)` / `qmax(bits)`).
 
 Weights are quantized per-output-channel (8-bit) or per-group along the
 reduction dim (4-bit, group_size=128 default); activations per-token,
@@ -106,17 +117,31 @@ def preset(name: str) -> Optional[QuantConfig]:
 # ---------------------------------------------------------------------------
 
 def qmax(bits: int) -> int:
+    """Largest quantized value: 2^(n-1) - 1 (127 for int8, 7 for int4)."""
     return 2 ** (bits - 1) - 1
 
 
 def qmin(bits: int) -> int:
+    """Smallest quantized value — the canonical *narrow symmetric* bound
+    -(2^(n-1) - 1), NOT the two's-complement storage minimum (see module
+    docstring)."""
+    return -qmax(bits)
+
+
+def qmin_storage(bits: int) -> int:
+    """Two's-complement storage minimum (-128 for int8). Valid as a storage
+    bit pattern only; quantized values are clipped to [qmin, qmax]."""
     return -(2 ** (bits - 1))
+
+
+def scale_denom(bits: int) -> float:
+    """Denominator of the paper's Eq. 2 scale: 2^n - 1 levels."""
+    return float(2 ** bits - 1)
 
 
 def paper_scale(absmax: jax.Array, bits: int) -> jax.Array:
     """s = 2*max|X| / (2^n - 1). Guards zero rows with eps."""
-    denom = float(2**bits - 1)
-    s = 2.0 * absmax.astype(jnp.float32) / denom
+    s = 2.0 * absmax.astype(jnp.float32) / scale_denom(bits)
     return jnp.maximum(s, 1e-8)
 
 

@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import tpu_compiler_params
 from repro.kernels.quantize_act import _fwht, _pick_bm
 
 
@@ -36,5 +37,7 @@ def block_hadamard(x: jax.Array, *, block: int = 128,
         in_specs=[pl.BlockSpec((bm, k), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((bm, k), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((m, k), x.dtype),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel",)),
         interpret=interpret,
     )(x)

@@ -20,10 +20,13 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-_QMAX = 127.0
-_SCALE_DENOM = 255.0  # paper Eq. 2: s = 2*max|X| / (2^8 - 1)
+from repro.core.quant.qtypes import qmax, qmin, scale_denom
+from repro.kernels import tpu_compiler_params
+
+_QMAX = float(qmax(8))
+_QMIN = float(qmin(8))              # canonical narrow symmetric range
+_SCALE_DENOM = scale_denom(8)       # paper Eq. 2: s = 2*max|X| / (2^8 - 1)
 _VMEM_BUDGET = 6 * 1024 * 1024  # bytes of f32 working set per block
 
 
@@ -62,7 +65,7 @@ def _make_kernel(has_smooth: bool, hadamard_block: int, has_norm: bool,
             t = _fwht(t, hadamard_block)
         absmax = jnp.max(jnp.abs(t), axis=-1, keepdims=True)
         scale = jnp.maximum(2.0 * absmax / _SCALE_DENOM, 1e-8)
-        q = jnp.clip(jnp.round(t / scale), -128.0, _QMAX)
+        q = jnp.clip(jnp.round(t / scale), _QMIN, _QMAX)
         q_ref[...] = q.astype(jnp.int8)
         scale_ref[...] = scale
 
@@ -112,6 +115,8 @@ def quantize_act_dynamic(x: jax.Array, smooth=None, gamma=None, *,
                    pl.BlockSpec((bm, 1), lambda i: (i, 0))],
         out_shape=[jax.ShapeDtypeStruct((m, k), jnp.int8),
                    jax.ShapeDtypeStruct((m, 1), jnp.float32)],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel",)),
         interpret=interpret,
     )(*args)
     return q, scale

@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.quant import qlinear
-from repro.core.quant.qtypes import QuantConfig, paper_scale
+from repro.core.quant.qtypes import QuantConfig, paper_scale, qmax, qmin
 from repro.models.layers import Taps, apply_rope, rms_norm
 
 NEG_INF = -1e9
@@ -251,7 +251,8 @@ def _kv_quant(x):
     """Per (token, head) symmetric int8. x: (..., hd)."""
     am = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
     s = paper_scale(am, 8)
-    q = jnp.clip(jnp.round(x.astype(jnp.float32) / s), -128, 127).astype(jnp.int8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / s),
+                 qmin(8), qmax(8)).astype(jnp.int8)
     return q, s
 
 

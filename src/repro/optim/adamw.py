@@ -9,6 +9,8 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.quant.qtypes import qmax, qmin
+
 
 @dataclasses.dataclass(frozen=True)
 class OptConfig:
@@ -86,8 +88,8 @@ def compress_grads(grads, err):
     compression unbiased over steps (1-bit/8-bit SGD literature)."""
     def one(g, e):
         t = g.astype(jnp.float32) + e
-        s = jnp.maximum(jnp.max(jnp.abs(t)), 1e-12) / 127.0
-        q = jnp.clip(jnp.round(t / s), -127, 127).astype(jnp.int8)
+        s = jnp.maximum(jnp.max(jnp.abs(t)), 1e-12) / qmax(8)
+        q = jnp.clip(jnp.round(t / s), qmin(8), qmax(8)).astype(jnp.int8)
         return q, s, t - q.astype(jnp.float32) * s
 
     flat, tdef = jax.tree.flatten(grads)

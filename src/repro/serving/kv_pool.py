@@ -30,7 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.quant.qtypes import paper_scale
+from repro.core.quant.qtypes import paper_scale, qmax, qmin
 
 SCRATCH_PAGE = 0
 
@@ -100,7 +100,7 @@ def _quantize_pages(x: jax.Array):
     am = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=(-3, -1))   # (..., nkv)
     s = paper_scale(am, 8)
     q = jnp.clip(jnp.round(x.astype(jnp.float32) / s[..., None, :, None]),
-                 -128, 127).astype(jnp.int8)
+                 qmin(8), qmax(8)).astype(jnp.int8)
     return q, s
 
 

@@ -28,6 +28,8 @@ except ImportError:                     # JAX 0.4.x experimental spelling
     from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
+from repro.core.quant.qtypes import qmax, qmin
+
 from repro.models import transformer
 from repro.optim import adamw
 
@@ -59,9 +61,9 @@ def int8_allreduce(grads, axis_names):
 
     def one(g):
         g = g.astype(jnp.float32)
-        s_local = jnp.max(jnp.abs(g)) / 127.0
+        s_local = jnp.max(jnp.abs(g)) / qmax(8)
         s = jnp.maximum(jax.lax.pmax(s_local, axis_names), 1e-12)
-        q = jnp.clip(jnp.round(g / s), -127, 127).astype(jnp.int8)
+        q = jnp.clip(jnp.round(g / s), qmin(8), qmax(8)).astype(jnp.int8)
         total = jax.lax.psum(q.astype(jnp.int32), axis_names)
         return total.astype(jnp.float32) * (s / n)
 

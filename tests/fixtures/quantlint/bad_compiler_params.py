@@ -1,0 +1,31 @@
+"""Seeded violations: pallas-compiler-params + raw-compiler-params.
+
+Never imported — parsed by tests/test_analysis.py through the AST linter.
+"""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2
+
+
+def missing_compiler_params(x):
+    # violation: no compiler_params= at all
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)
+
+
+def raw_compiler_params(x):
+    # violation x2: compiler_params not built via the shim, and a direct
+    # TPUCompilerParams construction outside repro/kernels/__init__.py
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel",)),
+    )(x)

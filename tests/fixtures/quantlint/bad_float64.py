@@ -1,0 +1,18 @@
+"""Seeded violations: no-float64 (attribute and string spellings).
+
+Never imported — parsed by tests/test_analysis.py through the AST linter.
+"""
+import jax.numpy as jnp
+import numpy as np
+
+
+def attr_spelling(x):
+    return x.astype(jnp.float64)
+
+
+def string_spelling(x):
+    return x.astype("float64")
+
+
+def numpy_attr(x):
+    return np.asarray(x, dtype=np.float64)

@@ -1,0 +1,30 @@
+"""Seeded violations: magic-quant-literal (and one no-float64).
+
+Never imported — parsed by tests/test_analysis.py through the AST linter.
+"""
+import jax.numpy as jnp
+
+
+def clip_with_magic_range(x):
+    # violations: -128, 127 clip bounds spelled as literals
+    return jnp.clip(jnp.round(x), -128, 127)
+
+
+def int4_denominator(absmax):
+    # violation: the int4 scale denominator 15 spelled as a literal
+    return 2.0 * absmax / 15
+
+
+def sneaky_double(x):
+    # violation: float spelling of the same bound
+    return x * 127.0
+
+
+def wide_accumulate(x):
+    # violation: float64 anywhere in the pipeline
+    return x.astype(jnp.float64)
+
+
+def mxu_tile_ok(x):
+    # NOT a violation: positive bare 128 is the ubiquitous MXU tile size
+    return x.reshape(-1, 128)

@@ -1,0 +1,41 @@
+"""Seeded violations: pallas-interpret (path-scoped to kernels/ trees).
+
+Never imported — parsed by tests/test_analysis.py through the AST linter.
+"""
+import jax
+from jax.experimental import pallas as pl
+
+from repro.kernels import tpu_compiler_params
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] + 1
+
+
+def no_escape_hatch(x):
+    # violation: pallas_call without interpret=
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        compiler_params=tpu_compiler_params(),
+    )(x)
+
+
+def hardcoded_escape_hatch(x):
+    # violation: interpret= passed but not plumbed from a wrapper parameter
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        compiler_params=tpu_compiler_params(),
+        interpret=False,
+    )(x)
+
+
+def good_wrapper(x, *, interpret: bool = False):
+    # NOT a violation: interpret= reaches callers
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        compiler_params=tpu_compiler_params(),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,13 @@
+"""Suppression-comment fixture: every seeded violation below is silenced.
+
+Never imported — parsed by tests/test_analysis.py through the AST linter.
+"""
+import jax.numpy as jnp
+
+
+def line_suppressed(x):
+    return jnp.clip(x, -128, 127)  # quantlint: disable=magic-quant-literal
+
+
+def multi_suppressed(x):
+    return x.astype(jnp.float64) * 127.0  # quantlint: disable=no-float64,magic-quant-literal
