@@ -2,8 +2,11 @@
 # Tier-1 CI: the exact commands the roadmap gates on.
 #   1. quantlint — AST rules + jaxpr dtype-flow invariants over src/ (blocking)
 #   2. pytest    — the tier-1 test suite
+#   3. serving bench (smoke) — KV bytes ratio, chunked-prefill speedup,
+#      decode-latency and compile-count gates, pallas==xla token parity
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 python -m repro.analysis src
 python -m pytest -x -q "$@"
+python benchmarks/bench_serving.py --smoke

@@ -132,6 +132,23 @@ def spec_paged_attn_dequant() -> TraceSpec:
                      {1: "quant", 2: "quant", 3: "scale", 4: "scale"})
 
 
+def spec_paged_prefill_dequant() -> TraceSpec:
+    """The chunked-prefill attention oracle: chunk queries against int8
+    pages, per-(page, head) dequant on the read path."""
+    from repro.kernels import paged_prefill
+    b, c, nq, nkv, hd, page, n_pages, w = 2, 16, 4, 2, 32, 8, 7, 3
+    args = (_sds((b, c, nq, hd), jnp.float32),
+            _sds((n_pages, page, nkv, hd), jnp.int8),
+            _sds((n_pages, page, nkv, hd), jnp.int8),
+            _sds((n_pages, nkv), jnp.float32),
+            _sds((n_pages, nkv), jnp.float32),
+            _sds((b, w), jnp.int32), _sds((b,), jnp.int32),
+            _sds((b,), jnp.int32))
+    return TraceSpec("paged_prefill_dequant",
+                     paged_prefill.paged_prefill_attention_ref, args,
+                     {1: "quant", 2: "quant", 3: "scale", 4: "scale"})
+
+
 # ---------------------------------------------------------------------------
 # Model-level graphs
 # ---------------------------------------------------------------------------
@@ -188,6 +205,35 @@ def spec_serving_decode() -> TraceSpec:
     return TraceSpec("serving_decode", step, args, auto_tags(args))
 
 
+def spec_serving_prefill_chunk() -> TraceSpec:
+    """The chunked mixed prefill/decode step (the chunked-engine path
+    bench_serving.py measures): fused quantize-on-write into int8 pages —
+    scale-once and int8-accum must hold through write_chunk's
+    dequant -> merge -> requantize as well as the attention read."""
+    from repro.configs import get_arch, reduced
+    from repro.models import transformer
+    from repro.serving.kv_pool import chunk_window_pages
+    cfg = reduced(get_arch("pangu_1b"))
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    b, page, n_pages, w, c = 2, 8, 9, 3, 16
+    wc = chunk_window_pages(c, page)
+    pools = transformer.init_paged_pools(cfg, n_pages, page, kv_bits=8)
+    page_table = jnp.ones((b, w), jnp.int32)
+    window_rows = jnp.ones((b, wc), jnp.int32)
+    tokens = jnp.zeros((b, c), jnp.int32)
+    q_start = jnp.zeros((b,), jnp.int32)
+    n_new = jnp.full((b,), c, jnp.int32)
+
+    def step(params, pools, page_table, window_rows, tokens, q_start, n_new):
+        logits, _ = transformer.prefill_chunk_paged(
+            params, pools, page_table, window_rows, tokens, q_start, n_new,
+            cfg, paged_impl="xla")
+        return logits
+
+    args = (params, pools, page_table, window_rows, tokens, q_start, n_new)
+    return TraceSpec("serving_prefill_chunk", step, args, auto_tags(args))
+
+
 def default_specs(*, fast: bool = False) -> List[TraceSpec]:
     specs = [
         spec_int8_gemm(),
@@ -195,9 +241,11 @@ def default_specs(*, fast: bool = False) -> List[TraceSpec]:
         spec_w4a8_gemm(),
         spec_w4a8_gemm_kernel(),
         spec_paged_attn_dequant(),
+        spec_paged_prefill_dequant(),
     ]
     if not fast:
         specs.append(spec_ptq_block("int8"))
         specs.append(spec_ptq_block("w4a8"))
         specs.append(spec_serving_decode())
+        specs.append(spec_serving_prefill_chunk())
     return specs

@@ -102,3 +102,51 @@ def hadamard_ref(x: jax.Array, block: int = 128) -> jax.Array:
 def kv_dequant_ref(k_q: jax.Array, k_scale: jax.Array) -> jax.Array:
     """Per (token, head) scales: k_q (..., S, H, D) int8, k_scale (..., S, H, 1)."""
     return k_q.astype(jnp.float32) * k_scale
+
+
+# ---------------------------------------------------------------------------
+# Chunked-prefill attention over paged KV (beyond-paper: batched prefill)
+# ---------------------------------------------------------------------------
+
+PAGED_NEG_INF = -1e30
+
+
+def paged_prefill_attention_ref(q, k_pages, v_pages, k_scale, v_scale,
+                                page_table, q_start, kv_lengths):
+    """Chunk-query causal attention against the paged (optionally int8) KV
+    pool — the XLA serving path and the contract the Pallas kernel in
+    `paged_prefill.py` is pinned to.
+
+    q: (B, C, nq, hd) chunk queries, query i at absolute position
+    q_start[b] + i; k_pages/v_pages: (P, page, nkv, hd) int8 or float;
+    k_scale/v_scale: (P, nkv) f32 per-(page, head) scales (int8 pools) or
+    None; page_table: (B, W) physical page ids; q_start: (B,);
+    kv_lengths: (B,) valid keys including the in-flight chunk (>= 1).
+    Query i sees keys at kpos <= q_start[b] + i with kpos < kv_lengths[b].
+    Returns (B, C, nq, hd) in q.dtype.
+    """
+    b, c, nq, hd = q.shape
+    _, page, nkv, _ = k_pages.shape
+    w = page_table.shape[1]
+    hper = nq // nkv
+
+    def read(pages, scales):
+        g = pages[page_table].astype(jnp.float32)      # (B, W, page, nkv, hd)
+        if pages.dtype == jnp.int8:
+            g = g * scales[page_table][:, :, None, :, None]
+        return g.reshape(b, w * page, nkv, hd)
+
+    k = read(k_pages, k_scale)
+    v = read(v_pages, v_scale)
+    if hper > 1:
+        k = jnp.repeat(k, hper, axis=2)
+        v = jnp.repeat(v, hper, axis=2)
+    qf = q.astype(jnp.float32) / (hd ** 0.5)
+    scores = jnp.einsum("bchd,bthd->bhct", qf, k)
+    kpos = jnp.arange(w * page)[None, None, None, :]
+    qpos = (q_start[:, None] + jnp.arange(c)[None, :])[:, None, :, None]
+    mask = (kpos <= qpos) & (kpos < kv_lengths[:, None, None, None])
+    scores = jnp.where(mask, scores, PAGED_NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhct,bthd->bchd", probs, v)
+    return out.astype(q.dtype)

@@ -41,6 +41,15 @@ def main(argv=None):
     ap.add_argument("--max-seq-len", type=int, default=256)
     ap.add_argument("--paged-impl", default="xla",
                     choices=["xla", "pallas", "pallas_interpret"])
+    ap.add_argument("--prefill-mode", default="chunked",
+                    choices=["chunked", "legacy"],
+                    help="chunked: batched mixed prefill/decode steps; "
+                    "legacy: one-shot prefill per admission")
+    ap.add_argument("--chunk-pages", type=int, default=2,
+                    help="prefill chunk size in pages (chunked mode)")
+    ap.add_argument("--token-budget", type=int, default=None,
+                    help="per-step token budget across prefill chunks and "
+                    "decode lanes (default: one chunk + all decode lanes)")
     ap.add_argument("--ckpt-dir", default=None,
                     help="restore trained weights (else random init)")
     ap.add_argument("--requests", type=int, default=8)
@@ -80,7 +89,9 @@ def main(argv=None):
         eng = ContinuousBatchingEngine(
             params, cfg, qcfg=qcfg, impl=impl, kv_bits=args.kv_bits,
             page_size=args.page_size, max_batch=args.max_batch,
-            max_seq_len=args.max_seq_len, paged_impl=args.paged_impl)
+            max_seq_len=args.max_seq_len, paged_impl=args.paged_impl,
+            prefill_mode=args.prefill_mode, chunk_pages=args.chunk_pages,
+            token_budget=args.token_budget)
         mode = "slow_think" if args.mode == "all" else args.mode
         t0 = time.time()
         res = eng.run(prompts, mode=mode, max_new=args.max_new)
@@ -88,7 +99,9 @@ def main(argv=None):
         total = sum(len(t) for t in res.tokens)
         print(f"[serve] continuous: {args.requests} requests, {total} tokens "
               f"in {dt:.1f}s ({total / dt:.1f} tok/s), "
-              f"{res.steps_run} decode steps, {res.evictions} evictions, "
+              f"{res.mixed_steps} mixed + {res.steps_run} decode steps, "
+              f"{res.prefill_tokens} prompt tokens chunked, "
+              f"{res.evictions} evictions, "
               f"KV {eng.kv_bytes_per_token():.0f} B/token")
         for i, toks in enumerate(res.tokens[:4]):
             print(f"[serve] req {i}: {len(toks)} tokens: {toks[:16]}")

@@ -380,6 +380,43 @@ def attn_decode_paged(p, x, cfg, pool: dict, page_table: jax.Array,
     return out, pool
 
 
+def attn_prefill_chunk_paged(p, x, cfg, pool: dict, page_table: jax.Array,
+                             window_rows: jax.Array, q_start: jax.Array,
+                             n_new: jax.Array, *,
+                             qcfg: Optional[QuantConfig] = None,
+                             impl=None, paged_impl: str = "xla"):
+    """Mixed chunked-prefill/decode attention step against the paged pool.
+
+    x: (B, C, d) chunk hidden states at absolute positions q_start[b] + i;
+    n_new: (B,) valid tokens this step (C = full prefill chunk, 1 = decode
+    slot riding the mixed step, 0 = idle slot); window_rows: (B, Wc)
+    physical pages covering the chunk's write window (kv_pool.write_chunk).
+
+    The chunk's K/V is quantized and written *directly* into its pages
+    (fused quantize-on-write — no dense cache), then the chunk queries
+    attend causally over everything written so far, so intra-chunk
+    attention sees the same (re-rounded) pages decode will. Returns
+    (out (B, C, d), pool)."""
+    from repro.kernels import paged_prefill
+    from repro.serving import kv_pool
+    b, c = x.shape[0], x.shape[1]
+    positions = q_start[:, None] + jnp.arange(c)[None, :]
+    q, k, v = _qkv(p, x, cfg, positions, qcfg, impl, None, "")
+    pool = kv_pool.write_chunk(pool, k, v, window_rows, q_start, n_new)
+    kv_len = jnp.maximum(q_start + n_new, 1)  # idle slots attend scratch
+    ks, vs = pool.get("k_s"), pool.get("v_s")
+    if paged_impl in ("pallas", "pallas_interpret"):
+        out = paged_prefill.paged_prefill_attention(
+            q, pool["k"], pool["v"], ks, vs, page_table, q_start, kv_len,
+            interpret=paged_impl == "pallas_interpret")
+    else:
+        out = paged_prefill.paged_prefill_attention_ref(
+            q, pool["k"], pool["v"], ks, vs, page_table, q_start, kv_len)
+    out = out.reshape(b, c, -1).astype(x.dtype)
+    out = qlinear.apply(p["wo"], out, qcfg, impl)
+    return out, pool
+
+
 def cross_decode(p, x, cfg, cache: dict, *, qcfg=None, impl=None):
     """Cross-attn at decode: context K/V precomputed at prefill."""
     nq, hd = cfg.n_heads, cfg.hd

@@ -521,6 +521,55 @@ def decode_step_paged(params, pools, page_table, tokens, pos, cfg, *,
     return logits, new_pools
 
 
+def prefill_chunk_paged(params, pools, page_table, window_rows, tokens,
+                        q_start, n_new, cfg, *, qcfg=None, impl=None,
+                        paged_impl: str = "xla", dtype=jnp.bfloat16):
+    """One mixed chunked-prefill/decode step against paged KV pools — the
+    single steady-state "mixed" compilation of the continuous-batching
+    engine (C = chunk width is static; every step has the same shape, so
+    decode latency stays flat while long prompts stream in chunks).
+
+    tokens: (B, C) int32 — a prompt chunk for prefilling slots, the last
+    sampled token in column 0 for decode slots, zeros for idle slots;
+    q_start: (B,) absolute position of chunk token 0 (== tokens already in
+    cache); n_new: (B,) valid tokens (C/partial = prefill chunk, 1 =
+    decode, 0 = idle); window_rows: (B, Wc) write-window pages
+    (kv_pool.write_chunk); page_table: (B, W) full table for reads.
+
+    Each block quantizes the chunk's K/V straight into int8 pages
+    (per-(page, head) scales) and attends causally over written pages plus
+    the in-flight chunk. Returns (logits (B, V) f32 at each slot's last
+    valid token, pools)."""
+    c = tokens.shape[1]
+    x = params["embed"]["w"].astype(dtype)[tokens]            # (B, C, d)
+
+    def body(x, scanned):
+        gp, gpool = scanned
+        new = {}
+        for i, btype in enumerate(cfg.pattern):
+            p = gp[str(i)]
+            h = rms_norm(x, p["ln1"]["g"], cfg.norm_eps)
+            a, pool = attn.attn_prefill_chunk_paged(
+                p["attn"], h, cfg, gpool[str(i)], page_table, window_rows,
+                q_start, n_new, qcfg=qcfg, impl=impl, paged_impl=paged_impl)
+            x = x + a
+            h = rms_norm(x, p["ln2"]["g"], cfg.norm_eps)
+            if btype == "moe":
+                m, _ = moe_mod.moe_ffn(p["moe"], h, cfg, qcfg, impl)
+                x = x + m
+            else:
+                x = x + mlp(p["mlp"], h, cfg.act, qcfg, impl)
+            new[str(i)] = pool
+        return x, new
+
+    x, new_pools = jax.lax.scan(body, x, (params["blocks"], pools))
+    x = rms_norm(x, params["final_norm"]["g"], cfg.norm_eps)
+    last = jnp.clip(n_new - 1, 0, c - 1)
+    x_last = x[jnp.arange(x.shape[0]), last]
+    logits = _lm_logits(params, x_last[:, None], cfg)[:, 0]
+    return logits, new_pools
+
+
 def init_caches(params, cfg, batch: int, max_len: int, kv_bits: int = 16):
     """Zero caches with the right per-group stacked structure."""
     caches = {}

@@ -11,9 +11,23 @@ requests *each step* into fixed batch slots; KV lives in fixed-size pages
 tokens actually held rather than slots x max_len, and finished sequences'
 pages are immediately reusable. The three CoT think modes are just
 different (directive token, stop policy) pairs feeding the same scheduler
-(cot.StopPolicy). Decode runs one jitted `transformer.decode_step_paged`
-over all slots; prefill runs per admission at page-bucketed lengths and is
-scattered into pages.
+(cot.StopPolicy).
+
+Prefill admission comes in two modes:
+
+  * "chunked" (default, Sarathi/vLLM-style): prompts stream through the
+    scheduler in fixed-shape page-aligned chunks of `chunk_pages` pages.
+    Each step batches prompt chunks from up to `token_budget` worth of
+    prefilling slots *together with* every ongoing decode slot into one
+    jitted mixed step (`transformer.prefill_chunk_paged`) whose K/V is
+    quantized directly into int8 pages (`kv_pool.write_chunk`) — no dense
+    bf16 cache and no second `_to_pages` pass. Steady state compiles
+    exactly two programs: the mixed step (any prefill in flight) and the
+    pure decode step.
+  * "legacy" (per-admission prefill, kept for A/B): each admitted request
+    runs a one-shot dense prefill at a power-of-two page bucket, then its
+    cache is scattered into pages. One extra compilation per distinct
+    bucket; decode stalls while prefill runs.
 """
 from __future__ import annotations
 
@@ -27,6 +41,7 @@ import numpy as np
 
 from repro.models import transformer
 from repro.serving import cot, sampling
+from repro.serving.kv_pool import SCRATCH_PAGE, chunk_window_pages
 from repro.serving.scheduler import PagedScheduler, Request
 
 
@@ -142,9 +157,11 @@ class ContinuousResult:
     tokens: List[List[int]]          # generated tokens, submission order
     modes: List[str]
     prompt_lens: List[int]
-    steps_run: int                   # batched decode steps
-    decode_tokens: int               # tokens produced by decode steps
+    steps_run: int                   # pure batched decode steps
+    decode_tokens: int               # tokens produced by decode lanes
     evictions: int
+    mixed_steps: int = 0             # chunked prefill+decode steps
+    prefill_tokens: int = 0          # prompt tokens written via chunks
 
 
 class ContinuousBatchingEngine:
@@ -160,7 +177,8 @@ class ContinuousBatchingEngine:
                  page_size: int = 16, max_batch: int = 8,
                  max_seq_len: int = 256, n_pages: Optional[int] = None,
                  eos_id: Optional[int] = None, dtype=jnp.bfloat16,
-                 paged_impl: str = "xla"):
+                 paged_impl: str = "xla", prefill_mode: str = "chunked",
+                 chunk_pages: int = 2, token_budget: Optional[int] = None):
         assert transformer.supports_paged(cfg), (
             f"paged decode needs full attention over token inputs: "
             f"pattern={cfg.pattern} (supported {transformer.PAGED_PATTERNS}),"
@@ -178,12 +196,26 @@ class ContinuousBatchingEngine:
         self.sched = PagedScheduler(
             n_slots=max_batch, n_pages=n_pages, page_size=page_size,
             max_pages_per_seq=self.max_pages_per_seq)
+        assert prefill_mode in ("chunked", "legacy"), prefill_mode
+        self.prefill_mode = prefill_mode
+        self.chunk_tokens = chunk_pages * page_size
+        if self.chunk_tokens > max_seq_len:
+            raise ValueError(
+                f"chunk_pages {chunk_pages} x page_size {page_size} exceeds "
+                f"max_seq_len {max_seq_len}")
+        self.window_pages = chunk_window_pages(self.chunk_tokens, page_size)
+        # token budget per mixed step: decode lanes cost 1 token each, a
+        # prefill chunk costs chunk_tokens; default = one chunk + all lanes
+        self.token_budget = (token_budget if token_budget is not None
+                             else self.chunk_tokens + max_batch)
         self._last_tok = np.zeros(max_batch, np.int32)
         self._requests: Dict[int, Request] = {}
         self._policies: Dict[int, cot.StopPolicy] = {}
         self._next_rid = 0
         self.steps_run = 0
         self.decode_tokens = 0
+        self.mixed_steps = 0
+        self.prefill_tokens = 0
 
         self._prefill = jax.jit(
             partial(transformer.prefill, cfg=cfg, qcfg=qcfg, impl=impl,
@@ -191,6 +223,9 @@ class ContinuousBatchingEngine:
             static_argnames=("max_len",))
         self._decode = jax.jit(
             partial(transformer.decode_step_paged, cfg=cfg, qcfg=qcfg,
+                    impl=impl, paged_impl=paged_impl, dtype=dtype))
+        self._mixed = jax.jit(
+            partial(transformer.prefill_chunk_paged, cfg=cfg, qcfg=qcfg,
                     impl=impl, paged_impl=paged_impl, dtype=dtype))
         self._sample = jax.jit(lambda lg: jnp.argmax(lg, -1).astype(jnp.int32))
 
@@ -214,6 +249,14 @@ class ContinuousBatchingEngine:
         n_pages = self.sched.alloc.n_pages
         return sum(kv_pool.pool_bytes(p) for p in self.pools.values()) \
             / (n_pages * self.page_size)
+
+    def compile_counts(self) -> Dict[str, int]:
+        """Compilation-cache sizes of the jitted step functions. Chunked
+        steady state is exactly {mixed: 1, decode: 1, prefill: 0}; legacy
+        pays one `prefill` entry per distinct power-of-two page bucket."""
+        return {"prefill": self._prefill._cache_size(),
+                "mixed": self._mixed._cache_size(),
+                "decode": self._decode._cache_size()}
 
     # -- request lifecycle ----------------------------------------------------
 
@@ -239,18 +282,27 @@ class ContinuousBatchingEngine:
         return rid
 
     def _prefill_one(self, slot: int, req: Request) -> None:
+        """Legacy one-shot prefill, bucketed to the next power-of-two page
+        count so the compile count is O(log max_seq_len) rather than one
+        program per distinct prompt-page count."""
         page = self.page_size
         n = len(req.prompt)
         need = -(-n // page)
-        bucket = need * page
+        bucket_pages = 1 << (need - 1).bit_length()
+        bucket = bucket_pages * page
         toks = np.zeros((1, bucket), np.int32)
         toks[0, :n] = req.prompt
         lens = jnp.asarray([n], jnp.int32)
         logits, caches = self._prefill(
             self.params, {"tokens": jnp.asarray(toks), "lengths": lens},
             max_len=bucket)
-        rows = jnp.asarray(self.sched.page_table[slot:slot + 1, :need])
-        self.pools = self._to_pages(self.pools, caches, rows, lens)
+        # bucket rows beyond the prompt's allocation scatter into scratch
+        # (write_prefill zeroes positions >= lengths, so the writes are 0s)
+        rows = np.full((1, bucket_pages), SCRATCH_PAGE, np.int32)
+        rows[0, :need] = self.sched.page_table[slot, :need]
+        self.pools = self._to_pages(self.pools, caches, jnp.asarray(rows),
+                                    lens)
+        self.prefill_tokens += n
         tok = int(np.asarray(self._sample(logits))[0])
         req.out.append(tok)
         self._last_tok[slot] = tok
@@ -258,8 +310,13 @@ class ContinuousBatchingEngine:
             self.sched.complete(slot)
 
     def step(self) -> bool:
-        """One engine step: admit + prefill, ensure pages, batched decode.
-        Returns whether any progress was made (admission or decode)."""
+        """One engine step. Returns whether any progress was made."""
+        if self.prefill_mode == "legacy":
+            return self._step_legacy()
+        return self._step_chunked()
+
+    def _step_legacy(self) -> bool:
+        """Admit + one-shot prefill per admission, then one batched decode."""
         sched = self.sched
         progressed = False
         while True:
@@ -289,12 +346,125 @@ class ContinuousBatchingEngine:
                 sched.complete(slot)
         return True
 
+    # -- chunked prefill ------------------------------------------------------
+
+    def _plan_chunked(self):
+        """Pick this step's lanes and secure their pages. Preemption during
+        growth can evict lanes already picked (including mid-prefill
+        victims), so the plan is recomputed until a pass allocates without
+        evicting. Returns (advancing prefill slots, decode slots)."""
+        sched = self.sched
+        c = self.chunk_tokens
+        while True:
+            prefilling = sched.prefilling_slots()
+            decoding = sched.decoding_slots()
+            budget_left = self.token_budget - len(decoding)
+            n_adv = max(1, budget_left // c) if prefilling else 0
+            advancing = prefilling[:n_adv]
+            evicted = False
+            for slot in decoding:
+                if slot not in sched.active:
+                    continue
+                if sched.grow_to(slot, int(sched.lengths[slot]) + 1):
+                    evicted = True
+            for slot in advancing:
+                if slot not in sched.active:
+                    continue
+                req = sched.active[slot]
+                prog = int(sched.prefill_progress[slot])
+                n_new = min(c, len(req.prompt) - prog)
+                if sched.grow_to(slot, prog + n_new):
+                    evicted = True
+            if not evicted:
+                advancing = [s for s in advancing if s in sched.active]
+                decoding = [s for s in decoding if s in sched.active]
+                return advancing, decoding
+
+    def _step_chunked(self) -> bool:
+        """Admit lazily (first chunk's pages only), then run one fixed-shape
+        mixed step: prompt chunks for advancing prefill slots, one token for
+        each decode slot, idle lanes masked out with n_new = 0."""
+        sched = self.sched
+        page = self.page_size
+        c, wc = self.chunk_tokens, self.window_pages
+        progressed = bool(sched.admit(max_prefill_pages=c // page))
+        if not sched.active:
+            return progressed
+        advancing, decoding = self._plan_chunked()
+
+        if not advancing:
+            # steady-state decode: same compiled program as legacy decode
+            logits, self.pools = self._decode(
+                self.params, self.pools, jnp.asarray(sched.page_table),
+                jnp.asarray(self._last_tok), jnp.asarray(sched.lengths))
+            self.steps_run += 1
+        else:
+            b = sched.n_slots
+            toks = np.zeros((b, c), np.int32)
+            q_start = np.zeros(b, np.int32)
+            n_new = np.zeros(b, np.int32)
+            windows = np.full((b, wc), SCRATCH_PAGE, np.int32)
+
+            def fill_window(slot, start):
+                pidx0 = start // page
+                row = sched.page_table[slot]
+                take = min(wc, row.shape[0] - pidx0)
+                windows[slot, :take] = row[pidx0:pidx0 + take]
+
+            for slot in advancing:
+                req = sched.active[slot]
+                prog = int(sched.prefill_progress[slot])
+                n = min(c, len(req.prompt) - prog)
+                toks[slot, :n] = req.prompt[prog:prog + n]
+                q_start[slot] = prog
+                n_new[slot] = n
+                fill_window(slot, prog)
+            for slot in decoding:
+                start = int(sched.lengths[slot])
+                toks[slot, 0] = self._last_tok[slot]
+                q_start[slot] = start
+                n_new[slot] = 1
+                fill_window(slot, start)
+
+            logits, self.pools = self._mixed(
+                self.params, self.pools, jnp.asarray(sched.page_table),
+                jnp.asarray(windows), jnp.asarray(toks),
+                jnp.asarray(q_start), jnp.asarray(n_new))
+            self.mixed_steps += 1
+
+        nxt = np.asarray(self._sample(logits))
+        for slot in advancing:
+            req = sched.active[slot]
+            n = int(n_new[slot])
+            sched.prefill_progress[slot] += n
+            sched.lengths[slot] += n
+            self.prefill_tokens += n
+            if int(sched.prefill_progress[slot]) == len(req.prompt):
+                # prompt fully in cache: logits at its last token yield the
+                # first generated token (as legacy prefill does)
+                tok = int(nxt[slot])
+                req.out.append(tok)
+                self._last_tok[slot] = tok
+                if self._policies[req.rid].done(req.out):
+                    sched.complete(slot)
+        for slot in decoding:
+            req = sched.active[slot]
+            sched.lengths[slot] += 1
+            tok = int(nxt[slot])
+            req.out.append(tok)
+            self._last_tok[slot] = tok
+            self.decode_tokens += 1
+            if self._policies[req.rid].done(req.out):
+                sched.complete(slot)
+        return True
+
     def run(self, prompts: Sequence[Sequence[int]], *,
             mode: str = "slow_think", max_new: int = 32,
             max_steps: int = 100_000) -> ContinuousResult:
         rids = [self.submit(p, mode=mode, max_new=max_new) for p in prompts]
         steps0, tokens0 = self.steps_run, self.decode_tokens
         evict0 = self.sched.n_evictions
+        mixed0, pf0 = self.mixed_steps, self.prefill_tokens
         steps = 0
         while not self.sched.idle:
             progressed = self.step()
@@ -310,4 +480,6 @@ class ContinuousBatchingEngine:
             prompt_lens=[len(r.prompt) for r in reqs],
             steps_run=self.steps_run - steps0,
             decode_tokens=self.decode_tokens - tokens0,
-            evictions=self.sched.n_evictions - evict0)
+            evictions=self.sched.n_evictions - evict0,
+            mixed_steps=self.mixed_steps - mixed0,
+            prefill_tokens=self.prefill_tokens - pf0)

@@ -40,12 +40,18 @@ SCRATCH_PAGE = 0
 # ---------------------------------------------------------------------------
 
 class PageAllocator:
-    """Free-list over physical pages 1..n_pages-1 (page 0 is scratch)."""
+    """Free-list over physical pages 1..n_pages-1 (page 0 is scratch).
+
+    `free` is hardened against the two scheduler bugs that silently corrupt
+    a shared pool: double-free (the page re-enters the free list while a
+    sequence still maps it -> cross-sequence KV leakage) and out-of-range
+    ids (a stale page table row scattering into foreign memory)."""
 
     def __init__(self, n_pages: int):
         assert n_pages >= 2, "need at least one allocatable page + scratch"
         self.n_pages = n_pages
         self._free: List[int] = list(range(n_pages - 1, 0, -1))
+        self._allocated: set = set()
 
     @property
     def n_free(self) -> int:
@@ -56,12 +62,18 @@ class PageAllocator:
         if n > len(self._free):
             return None
         out = [self._free.pop() for _ in range(n)]
+        self._allocated.update(out)
         return out
 
     def free(self, pages) -> None:
         for p in pages:
+            p = int(p)
             assert p != SCRATCH_PAGE, "freeing the scratch page"
-            self._free.append(int(p))
+            assert 0 < p < self.n_pages, f"page id {p} out of range " \
+                f"[1, {self.n_pages - 1}]"
+            assert p in self._allocated, f"double free of page {p}"
+            self._allocated.discard(p)
+            self._free.append(p)
 
 
 # ---------------------------------------------------------------------------
@@ -136,6 +148,73 @@ def write_prefill(pool: dict, k: jax.Array, v: jax.Array,
             kz.reshape(-1, page, nkv, hd).astype(dt))
         pool["v"] = pool["v"].at[ids].set(
             vz.reshape(-1, page, nkv, hd).astype(dt))
+    return pool
+
+
+# -- chunked prefill: fused quantize-on-write ---------------------------------
+
+def chunk_window_pages(chunk_tokens: int, page_size: int) -> int:
+    """Pages a C-token write window can span at arbitrary (unaligned) start:
+    C//page full pages plus one boundary page."""
+    assert chunk_tokens % page_size == 0, (chunk_tokens, page_size)
+    return chunk_tokens // page_size + 1
+
+
+def write_chunk(pool: dict, k: jax.Array, v: jax.Array,
+                window_rows: jax.Array, start: jax.Array,
+                n_new: jax.Array) -> dict:
+    """Write up to C new tokens per sequence at positions start..start+n_new-1,
+    quantizing directly into pages (no dense intermediate cache).
+
+    k, v: (B, C, nkv, hd) chunk K/V (positions beyond n_new are garbage);
+    window_rows: (B, Wc) physical page ids covering page indices
+    start//page .. start//page + Wc - 1 (scratch beyond the sequence's
+    allocation), Wc = chunk_window_pages(C, page);
+    start: (B,) absolute position of chunk token 0 (== tokens already in
+    cache); n_new: (B,) valid tokens this step — C for a full prefill chunk,
+    1 for a riding decode slot, 0 for an idle slot.
+
+    Boundary pages are gathered, dequantized, masked to their previously
+    written tokens (positions < start; freed pages are reused without
+    zeroing), merged with the chunk, and requantized per (page, head) —
+    the same bounded re-rounding `write_token` pays, amortized over the
+    whole chunk. Unwritten window positions are zeroed so they cannot
+    inflate the page scale.
+    """
+    page = pool["k"].shape[1]
+    b, c, nkv, hd = k.shape
+    wc = window_rows.shape[1]
+    assert wc * page >= c + page, (wc, page, c)
+    wpos = jnp.arange(wc * page)[None, :]                     # window-local
+    base = (start // page) * page
+    gpos = base[:, None] + wpos                               # absolute
+    off = start - base                                        # (B,)
+    j = wpos - off[:, None]                                   # chunk index
+    jc = jnp.clip(j, 0, c - 1)
+    keep_old = (gpos < start[:, None])[..., None, None]
+    use_new = ((j >= 0) & (j < n_new[:, None]))[..., None, None]
+    ids = window_rows.reshape(-1)
+    quantized = pool_is_quantized(pool)
+    pool = dict(pool)
+    for name, s_name, tok in (("k", "k_s", k), ("v", "v_s", v)):
+        pages = pool[name][window_rows].astype(jnp.float32)   # (B,Wc,page,..)
+        if quantized:
+            sc = pool[s_name][window_rows]                    # (B, Wc, nkv)
+            pages = pages * sc[:, :, None, :, None]
+        f = pages.reshape(b, wc * page, nkv, hd)
+        f = jnp.where(keep_old, f, 0.0)
+        newv = jnp.take_along_axis(tok.astype(jnp.float32),
+                                   jc[:, :, None, None], axis=1)
+        f = jnp.where(use_new, newv, f)
+        f = f.reshape(b, wc, page, nkv, hd)
+        if quantized:
+            q, s = _quantize_pages(f)
+            pool[name] = pool[name].at[ids].set(
+                q.reshape(-1, page, nkv, hd))
+            pool[s_name] = pool[s_name].at[ids].set(s.reshape(-1, nkv))
+        else:
+            pool[name] = pool[name].at[ids].set(
+                f.reshape(-1, page, nkv, hd).astype(pool[name].dtype))
     return pool
 
 

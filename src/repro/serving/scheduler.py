@@ -1,18 +1,30 @@
 """Continuous-batching scheduler over the paged KV pool.
 
 Host-side control plane: requests wait in a FIFO, get admitted into one of
-`n_slots` fixed batch slots when a slot and enough pages for their prompt
-are free, and release everything on completion. Decode capacity is ensured
-every step: a sequence crossing a page boundary gets a fresh page from the
-free list; when the pool is exhausted the most-recently-admitted other
-request is preempted (recompute-style: its pages are freed and it requeues
-at the front of the FIFO, generation restarting from the prompt — the
-vLLM-style answer to fragmentation-free oversubscription).
+`n_slots` fixed batch slots when a slot and enough pages are free, and
+release everything on completion. Two admission regimes share the slot/page
+machinery:
+
+  * legacy (per-admission prefill): a request needs all its prompt pages up
+    front; `lengths`/`prefill_progress` jump straight to the prompt length.
+  * chunked prefill: a request is admitted with only its *first chunk's*
+    pages; `prefill_progress[slot]` tracks how many prompt tokens have been
+    written, pages are granted chunk-by-chunk via `grow_to`, and the engine
+    batches chunks from several slots with ongoing decode slots into one
+    mixed step under a token budget.
+
+Decode capacity is ensured every step: a sequence crossing a page boundary
+gets a fresh page from the free list; when the pool is exhausted the
+most-recently-admitted other request is preempted (recompute-style: its
+pages are freed — including a partially-prefilled prompt's — and it
+requeues at the front of the FIFO with its progress reset, generation
+restarting from the prompt: the vLLM-style answer to fragmentation-free
+oversubscription).
 
 The device never sees any of this: it gets a dense (n_slots, W) page table,
 per-slot lengths, and last tokens. Inactive slots carry length 0 and a
 scratch-zeroed page-table row, so their (masked, unused) lanes stay
-shape-static in the jitted decode step.
+shape-static in the jitted steps.
 """
 from __future__ import annotations
 
@@ -47,6 +59,7 @@ class PagedScheduler:
         self.page_table = np.full((n_slots, max_pages_per_seq), SCRATCH_PAGE,
                                   np.int32)
         self.lengths = np.zeros(n_slots, np.int32)      # tokens in cache
+        self.prefill_progress = np.zeros(n_slots, np.int32)  # prompt written
         self.seq_pages: List[List[int]] = [[] for _ in range(n_slots)]
         self.active: Dict[int, Request] = {}
         self.waiting: Deque[Request] = deque()
@@ -71,12 +84,23 @@ class PagedScheduler:
 
     # -- admission -----------------------------------------------------------
 
-    def admit(self) -> List[Tuple[int, Request]]:
-        """Admit FIFO-head requests while a slot + prompt pages are free."""
+    def admit(self, max_prefill_pages: Optional[int] = None
+              ) -> List[Tuple[int, Request]]:
+        """Admit FIFO-head requests while a slot + enough pages are free.
+
+        max_prefill_pages=None (legacy per-admission prefill): a request
+        needs all its prompt pages up front and enters fully prefilled
+        (the caller runs the one-shot prefill right after).
+
+        max_prefill_pages=k (chunked prefill): a request needs only its
+        first chunk's pages — min(prompt pages, k) — and enters with
+        prefill_progress 0; later chunks grow the page list via grow_to."""
         admitted = []
         while self.waiting and self.free_slots:
             req = self.waiting[0]
             need = -(-len(req.prompt) // self.page_size)
+            if max_prefill_pages is not None:
+                need = min(need, max_prefill_pages)
             pages = self.alloc.alloc(need)
             if pages is None:
                 break
@@ -85,45 +109,75 @@ class PagedScheduler:
             self.seq_pages[slot] = pages
             self.page_table[slot, :] = SCRATCH_PAGE
             self.page_table[slot, :need] = pages
-            self.lengths[slot] = len(req.prompt)
+            if max_prefill_pages is None:
+                self.lengths[slot] = len(req.prompt)
+                self.prefill_progress[slot] = len(req.prompt)
+            else:
+                self.lengths[slot] = 0
+                self.prefill_progress[slot] = 0
             self.active[slot] = req
             self._admit_order[slot] = self._admit_seq
             self._admit_seq += 1
             admitted.append((slot, req))
         return admitted
 
-    # -- decode capacity -----------------------------------------------------
+    # -- slot phases (chunked prefill) ----------------------------------------
+
+    def prefilling_slots(self) -> List[int]:
+        """Active slots whose prompt is not fully written yet, in admission
+        order (FIFO fairness for chunk scheduling)."""
+        slots = [s for s in self.active
+                 if self.prefill_progress[s] < len(self.active[s].prompt)]
+        return sorted(slots, key=lambda s: self._admit_order[s])
+
+    def decoding_slots(self) -> List[int]:
+        return sorted(s for s in self.active
+                      if self.prefill_progress[s] >= len(self.active[s].prompt))
+
+    # -- page capacity --------------------------------------------------------
+
+    def grow_to(self, slot: int, n_tokens: int) -> List[Request]:
+        """Grow `slot`'s page list to cover `n_tokens` cache positions,
+        preempting the most-recently-admitted active request when the pool
+        is dry — *including the grower itself*: a newest slot that can't
+        grow yields (self-preempts) rather than starving older work, so the
+        oldest request always makes monotonic progress and mutual-eviction
+        livelock is impossible. Returns the preempted (requeued) requests —
+        the caller must re-derive any slot sets it holds (and check the
+        grower survived), since victims may be mid-prefill: their pages,
+        including partially-written prompt pages, are freed and their
+        progress reset (preemption-safe partial-prefill release)."""
+        need_pages = -(-n_tokens // self.page_size)
+        if need_pages > self.max_pages_per_seq:
+            raise RuntimeError(
+                f"sequence in slot {slot} exceeded max_pages_per_seq")
+        evicted = []
+        while need_pages > len(self.seq_pages[slot]):
+            page = self.alloc.alloc(1)
+            if page is None:
+                if len(self.active) <= 1:
+                    raise RuntimeError(
+                        "KV pool too small for a single sequence")
+                victim = max(self.active, key=lambda s: self._admit_order[s])
+                evicted.append(self._preempt(victim))
+                if victim == slot:
+                    return evicted
+                continue
+            pidx = len(self.seq_pages[slot])
+            self.seq_pages[slot].append(page[0])
+            self.page_table[slot, pidx] = page[0]
+        return evicted
 
     def ensure_decode_capacity(self) -> List[Request]:
-        """Each active slot writes position lengths[slot] this step; grow its
-        page list across page boundaries, preempting if the pool is dry.
-        Returns the preempted (requeued) requests."""
+        """Each active decode slot writes position lengths[slot] this step;
+        grow its page list across page boundaries, preempting if the pool
+        is dry. Returns the preempted (requeued) requests."""
         evicted = []
         for slot in sorted(list(self.active)):
             if slot not in self.active:        # evicted by an earlier slot
                 continue
-            pidx = int(self.lengths[slot]) // self.page_size
-            if pidx >= self.max_pages_per_seq:
-                raise RuntimeError(
-                    f"sequence in slot {slot} exceeded max_pages_per_seq")
-            while pidx >= len(self.seq_pages[slot]):
-                page = self.alloc.alloc(1)
-                if page is None:
-                    victim = self._pick_victim(exclude=slot)
-                    if victim is None:
-                        raise RuntimeError(
-                            "KV pool too small for a single sequence")
-                    evicted.append(self._preempt(victim))
-                    continue
-                self.seq_pages[slot].append(page[0])
-                self.page_table[slot, pidx] = page[0]
+            evicted.extend(self.grow_to(slot, int(self.lengths[slot]) + 1))
         return evicted
-
-    def _pick_victim(self, exclude: int) -> Optional[int]:
-        cands = [s for s in self.active if s != exclude]
-        if not cands:
-            return None
-        return max(cands, key=lambda s: self._admit_order[s])
 
     def _release(self, slot: int) -> Request:
         req = self.active.pop(slot)
@@ -131,6 +185,7 @@ class PagedScheduler:
         self.seq_pages[slot] = []
         self.page_table[slot, :] = SCRATCH_PAGE
         self.lengths[slot] = 0
+        self.prefill_progress[slot] = 0
         self._admit_order.pop(slot, None)
         self.free_slots.append(slot)
         return req

@@ -27,6 +27,27 @@ def test_allocator_free_list_reuse():
         a.free([SCRATCH_PAGE])
 
 
+def test_allocator_rejects_double_free_and_bad_ids():
+    """The two pool-corrupting bugs fail fast: freeing a page twice (it
+    would re-enter the free list while a live sequence still maps it) and
+    freeing an id outside 1..n_pages-1 (a stale page-table row)."""
+    a = PageAllocator(6)
+    got = a.alloc(3)
+    a.free(got[:1])
+    with pytest.raises(AssertionError, match="double free"):
+        a.free(got[:1])                       # already back in the list
+    with pytest.raises(AssertionError, match="double free"):
+        a.free(got[1:2] + got[1:2])           # twice in one call
+    # state stays consistent: pages 1 and 2 went back, 3 is still out
+    assert a.n_free == 4 and sorted(a.alloc(4)) == [1, 2, 4, 5]
+    with pytest.raises(AssertionError, match="out of range"):
+        a.free([6])
+    with pytest.raises(AssertionError, match="out of range"):
+        a.free([-1])
+    with pytest.raises(AssertionError):
+        a.free([SCRATCH_PAGE])
+
+
 def test_admission_respects_slots_and_pages():
     s = PagedScheduler(n_slots=2, n_pages=5, page_size=4, max_pages_per_seq=4)
     for rid, n in enumerate([8, 4, 4]):       # 2, 1, 1 pages
@@ -64,13 +85,22 @@ def test_decode_capacity_growth_and_preemption():
     s.lengths[0] = 4
     assert s.ensure_decode_capacity() == []
     assert len(s.seq_pages[0]) == 2 and s.alloc.n_free == 0
-    # seq 1 crosses next: pool dry -> most-recent other active is preempted
+    # seq 1 crosses next: pool dry -> the *newest* active is preempted, and
+    # seq 1 is itself the newest: it yields instead of starving seq 0
     s.lengths[1] = 4
     evicted = s.ensure_decode_capacity()
-    assert [r.rid for r in evicted] == [0]
+    assert [r.rid for r in evicted] == [1]
     assert evicted[0].out == [] and evicted[0].preemptions == 1
-    assert s.waiting[0].rid == 0              # requeued at the front
-    assert len(s.seq_pages[1]) == 2 and 1 in s.active and 0 not in s.active
+    assert s.waiting[0].rid == 1              # requeued at the front
+    assert len(s.seq_pages[0]) == 2 and 0 in s.active and 1 not in s.active
+    # with seq 1 gone its pages are free again: a re-admitted seq 1 whose
+    # growth hits a dry pool is now the victim of choice for seq 0
+    [(slot1, _)] = s.admit()
+    s.lengths[slot1] = 2
+    s.lengths[0] = 8                          # needs a third page
+    evicted = s.ensure_decode_capacity()
+    assert [r.rid for r in evicted] == [1]    # oldest keeps progressing
+    assert len(s.seq_pages[0]) == 3
 
 
 def test_no_cross_sequence_leakage():
