@@ -3,10 +3,12 @@
 #   1. quantlint — AST rules + jaxpr dtype-flow invariants over src/ (blocking)
 #   2. pytest    — the tier-1 test suite
 #   3. serving bench (smoke) — KV bytes ratio, chunked-prefill speedup,
-#      decode-latency and compile-count gates, pallas==xla token parity
+#      prefix-cache warm-TTFT/hit-rate/decode-floor gates, decode-latency
+#      and compile-count gates, pallas==xla token parity; metrics land in
+#      bench_smoke.json (uploaded as a CI artifact)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 python -m repro.analysis src
 python -m pytest -x -q "$@"
-python benchmarks/bench_serving.py --smoke
+python benchmarks/bench_serving.py --smoke --json bench_smoke.json

@@ -234,6 +234,41 @@ def spec_serving_prefill_chunk() -> TraceSpec:
     return TraceSpec("serving_prefill_chunk", step, args, auto_tags(args))
 
 
+def spec_serving_prefill_chunk_cached() -> TraceSpec:
+    """The prefix-cache-hit mixed step: a prefill chunk whose page table
+    maps previously-cached int8 pages for the shared prefix (q_start > 0,
+    the chunk writes only fresh tail pages). Scale-once and int8-accum must
+    hold when the attention read crosses pages this request never wrote —
+    the cached pages' per-(page, head) scales travel with the page."""
+    from repro.configs import get_arch, reduced
+    from repro.models import transformer
+    from repro.serving.kv_pool import chunk_window_pages
+    cfg = reduced(get_arch("pangu_1b"))
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    b, page, n_pages, w, c = 2, 8, 9, 4, 16
+    wc = chunk_window_pages(c, page)
+    pools = transformer.init_paged_pools(cfg, n_pages, page, kv_bits=8)
+    # rows 1..2 are another request's cached prefix pages; rows 3.. are this
+    # request's fresh tail pages — the write window starts past the hits
+    page_table = jnp.asarray(
+        np.arange(1, 1 + w, dtype=np.int32)[None].repeat(b, 0))
+    window_rows = jnp.asarray(
+        np.arange(3, 3 + wc, dtype=np.int32)[None].repeat(b, 0))
+    tokens = jnp.zeros((b, c), jnp.int32)
+    q_start = jnp.full((b,), 2 * page, jnp.int32)    # 2 pages served by cache
+    n_new = jnp.full((b,), c, jnp.int32)
+
+    def step(params, pools, page_table, window_rows, tokens, q_start, n_new):
+        logits, _ = transformer.prefill_chunk_paged(
+            params, pools, page_table, window_rows, tokens, q_start, n_new,
+            cfg, paged_impl="xla")
+        return logits
+
+    args = (params, pools, page_table, window_rows, tokens, q_start, n_new)
+    return TraceSpec("serving_prefill_chunk_cached", step, args,
+                     auto_tags(args))
+
+
 def default_specs(*, fast: bool = False) -> List[TraceSpec]:
     specs = [
         spec_int8_gemm(),
@@ -248,4 +283,5 @@ def default_specs(*, fast: bool = False) -> List[TraceSpec]:
         specs.append(spec_ptq_block("w4a8"))
         specs.append(spec_serving_decode())
         specs.append(spec_serving_prefill_chunk())
+        specs.append(spec_serving_prefill_chunk_cached())
     return specs

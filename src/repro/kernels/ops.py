@@ -21,6 +21,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+from jax.experimental import pallas as pl
 
 from repro.kernels import int8_gemm, w4a8_gemm, quantize_act, hadamard, ref
 
@@ -70,6 +71,38 @@ def _pad_m(x: jax.Array, mult: int):
     if pad:
         x = jnp.pad(x, ((0, pad), (0, 0)))
     return x, m
+
+
+# ---------------------------------------------------------------------------
+# Paged-attention kernel plumbing (shared by paged_attn / paged_prefill)
+# ---------------------------------------------------------------------------
+
+def paged_pool_scales(k_pages, k_scale, v_scale):
+    """Normalize per-(page, head) scale inputs for the paged kernels: int8
+    pools pass their real scales through; float pools get dummy all-ones
+    scales so one kernel signature serves both. Returns
+    (k_scale, v_scale, quantized)."""
+    quantized = k_pages.dtype == jnp.int8
+    if not quantized:
+        n_pages, _, nkv, _ = k_pages.shape
+        ones = jnp.ones((n_pages, nkv), jnp.float32)
+        k_scale, v_scale = ones, ones
+    return k_scale, v_scale, quantized
+
+
+def paged_block_specs(w: int, page: int, hd: int):
+    """(page-data, scale) BlockSpecs shared by the paged kernels on the
+    (B, n_kv_heads, W) grid: index_maps dereference the scalar-prefetched
+    flat page table `pt`; `*_` absorbs the kernel-specific trailing
+    prefetch refs (lengths, q_start, ...)."""
+    def page_map(bi, h, j, pt, *_):
+        return (pt[bi * w + j], 0, h, 0)
+
+    def scale_map(bi, h, j, pt, *_):
+        return (pt[bi * w + j], h)
+
+    return (pl.BlockSpec((1, page, 1, hd), page_map),
+            pl.BlockSpec((1, 1), scale_map))
 
 
 # ---------------------------------------------------------------------------

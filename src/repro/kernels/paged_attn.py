@@ -24,7 +24,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels import tpu_compiler_params
+from repro.kernels import ops, tpu_compiler_params
 
 NEG_INF = -1e30
 
@@ -85,11 +85,8 @@ def paged_decode_attention(q, k_pages, v_pages, k_scale, v_scale,
     w = page_table.shape[1]
     hper = nq // nkv
     assert nq == nkv * hper, (nq, nkv)
-    quantized = k_pages.dtype == jnp.int8
-    if not quantized:
-        # dummy scalar inputs keep one kernel signature for both pools
-        k_scale = jnp.ones((n_pages, nkv), jnp.float32)
-        v_scale = jnp.ones((n_pages, nkv), jnp.float32)
+    k_scale, v_scale, quantized = ops.paged_pool_scales(
+        k_pages, k_scale, v_scale)
 
     qg = q.reshape(b, nkv, hper, hd)
     pt_flat = page_table.reshape(-1).astype(jnp.int32)
@@ -97,12 +94,7 @@ def paged_decode_attention(q, k_pages, v_pages, k_scale, v_scale,
     kern = functools.partial(_kernel, page=page, scale=1.0 / (hd ** 0.5),
                              quantized=quantized)
     grid = (b, nkv, w)
-
-    def page_map(bi, h, j, pt, lens):
-        return (pt[bi * w + j], 0, h, 0)
-
-    def scale_map(bi, h, j, pt, lens):
-        return (pt[bi * w + j], h)
+    page_spec, scale_spec = ops.paged_block_specs(w, page, hd)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
@@ -110,10 +102,10 @@ def paged_decode_attention(q, k_pages, v_pages, k_scale, v_scale,
         in_specs=[
             pl.BlockSpec((1, 1, hper, hd), lambda bi, h, j, pt, lens:
                          (bi, h, 0, 0)),
-            pl.BlockSpec((1, page, 1, hd), page_map),
-            pl.BlockSpec((1, page, 1, hd), page_map),
-            pl.BlockSpec((1, 1), scale_map),
-            pl.BlockSpec((1, 1), scale_map),
+            page_spec,
+            page_spec,
+            scale_spec,
+            scale_spec,
         ],
         out_specs=pl.BlockSpec((1, 1, hper, hd), lambda bi, h, j, pt, lens:
                                (bi, h, 0, 0)),

@@ -35,7 +35,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels import tpu_compiler_params
+from repro.kernels import ops, tpu_compiler_params
 from repro.kernels.ref import paged_prefill_attention_ref  # noqa: F401  (oracle)
 
 NEG_INF = -1e30
@@ -100,11 +100,8 @@ def paged_prefill_attention(q, k_pages, v_pages, k_scale, v_scale,
     w = page_table.shape[1]
     hper = nq // nkv
     assert nq == nkv * hper, (nq, nkv)
-    quantized = k_pages.dtype == jnp.int8
-    if not quantized:
-        # dummy scalar inputs keep one kernel signature for both pools
-        k_scale = jnp.ones((n_pages, nkv), jnp.float32)
-        v_scale = jnp.ones((n_pages, nkv), jnp.float32)
+    k_scale, v_scale, quantized = ops.paged_pool_scales(
+        k_pages, k_scale, v_scale)
 
     # rows: chunk-major, heads-within-token minor -> row r = token r // hper
     qg = (q.reshape(b, c, nkv, hper, hd).transpose(0, 2, 1, 3, 4)
@@ -114,12 +111,7 @@ def paged_prefill_attention(q, k_pages, v_pages, k_scale, v_scale,
     kern = functools.partial(_kernel, page=page, hper=hper,
                              scale=1.0 / (hd ** 0.5), quantized=quantized)
     grid = (b, nkv, w)
-
-    def page_map(bi, h, j, pt, qs, lens):
-        return (pt[bi * w + j], 0, h, 0)
-
-    def scale_map(bi, h, j, pt, qs, lens):
-        return (pt[bi * w + j], h)
+    page_spec, scale_spec = ops.paged_block_specs(w, page, hd)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
@@ -127,10 +119,10 @@ def paged_prefill_attention(q, k_pages, v_pages, k_scale, v_scale,
         in_specs=[
             pl.BlockSpec((1, 1, c * hper, hd), lambda bi, h, j, pt, qs, lens:
                          (bi, h, 0, 0)),
-            pl.BlockSpec((1, page, 1, hd), page_map),
-            pl.BlockSpec((1, page, 1, hd), page_map),
-            pl.BlockSpec((1, 1), scale_map),
-            pl.BlockSpec((1, 1), scale_map),
+            page_spec,
+            page_spec,
+            scale_spec,
+            scale_spec,
         ],
         out_specs=pl.BlockSpec((1, 1, c * hper, hd),
                                lambda bi, h, j, pt, qs, lens: (bi, h, 0, 0)),

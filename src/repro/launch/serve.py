@@ -50,6 +50,9 @@ def main(argv=None):
     ap.add_argument("--token-budget", type=int, default=None,
                     help="per-step token budget across prefill chunks and "
                     "decode lanes (default: one chunk + all decode lanes)")
+    ap.add_argument("--prefix-cache", default="on", choices=["on", "off"],
+                    help="share quantized prompt pages across requests via "
+                    "refcounted page-table entries (chunked mode only)")
     ap.add_argument("--ckpt-dir", default=None,
                     help="restore trained weights (else random init)")
     ap.add_argument("--requests", type=int, default=8)
@@ -86,12 +89,17 @@ def main(argv=None):
     prompts = make_prompts(DataConfig(vocab=cfg.vocab, seq_len=64),
                            args.requests, args.prompt_len)
     if args.engine == "continuous":
+        use_cache = args.prefix_cache == "on"
+        if use_cache and args.prefill_mode == "legacy":
+            print("[serve] prefix cache requires chunked prefill; "
+                  "disabling for --prefill-mode legacy")
+            use_cache = False
         eng = ContinuousBatchingEngine(
             params, cfg, qcfg=qcfg, impl=impl, kv_bits=args.kv_bits,
             page_size=args.page_size, max_batch=args.max_batch,
             max_seq_len=args.max_seq_len, paged_impl=args.paged_impl,
             prefill_mode=args.prefill_mode, chunk_pages=args.chunk_pages,
-            token_budget=args.token_budget)
+            token_budget=args.token_budget, prefix_cache=use_cache)
         mode = "slow_think" if args.mode == "all" else args.mode
         t0 = time.time()
         res = eng.run(prompts, mode=mode, max_new=args.max_new)
@@ -103,6 +111,12 @@ def main(argv=None):
               f"{res.prefill_tokens} prompt tokens chunked, "
               f"{res.evictions} evictions, "
               f"KV {eng.kv_bytes_per_token():.0f} B/token")
+        if use_cache:
+            st = eng.prefix_cache_stats()
+            print(f"[serve] prefix cache: hit rate {st['hit_rate']:.2f} "
+                  f"({st['hit_tokens']}/{st['prompt_tokens']} prompt tokens), "
+                  f"{st['cached_pages']} cached pages "
+                  f"({st['unreferenced_pages']} unreferenced)")
         for i, toks in enumerate(res.tokens[:4]):
             print(f"[serve] req {i}: {len(toks)} tokens: {toks[:16]}")
         return 0

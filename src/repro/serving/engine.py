@@ -162,6 +162,7 @@ class ContinuousResult:
     evictions: int
     mixed_steps: int = 0             # chunked prefill+decode steps
     prefill_tokens: int = 0          # prompt tokens written via chunks
+    prefix_hit_tokens: int = 0       # prompt tokens served from the cache
 
 
 class ContinuousBatchingEngine:
@@ -171,6 +172,13 @@ class ContinuousBatchingEngine:
     pool defaults to full occupancy (every slot can reach max_seq_len) —
     pass a smaller n_pages to exercise preemption. Greedy sampling (the
     deterministic serving path the paper's CoT study measures).
+
+    prefix_cache=True (chunked mode only) shares quantized prompt pages
+    across requests via the page table: admission maps the longest cached
+    prefix of full prompt pages in bit-exact (no recompute), and only the
+    uncached tail is chunk-prefilled; finished requests promote their
+    prompt pages. Cache hits change page-table *contents*, never step
+    shapes, so compile_counts() stays at the two-program steady state.
     """
 
     def __init__(self, params, cfg, *, qcfg=None, impl=None, kv_bits=16,
@@ -178,7 +186,8 @@ class ContinuousBatchingEngine:
                  max_seq_len: int = 256, n_pages: Optional[int] = None,
                  eos_id: Optional[int] = None, dtype=jnp.bfloat16,
                  paged_impl: str = "xla", prefill_mode: str = "chunked",
-                 chunk_pages: int = 2, token_budget: Optional[int] = None):
+                 chunk_pages: int = 2, token_budget: Optional[int] = None,
+                 prefix_cache: bool = False):
         assert transformer.supports_paged(cfg), (
             f"paged decode needs full attention over token inputs: "
             f"pattern={cfg.pattern} (supported {transformer.PAGED_PATTERNS}),"
@@ -193,10 +202,15 @@ class ContinuousBatchingEngine:
             n_pages = 1 + max_batch * self.max_pages_per_seq
         self.pools = transformer.init_paged_pools(
             cfg, n_pages, page_size, kv_bits, dtype)
+        assert prefill_mode in ("chunked", "legacy"), prefill_mode
+        assert not (prefix_cache and prefill_mode == "legacy"), \
+            "prefix caching needs chunked prefill (one-shot prefill would " \
+            "rewrite shared pages)"
+        self.prefix_cache = prefix_cache
         self.sched = PagedScheduler(
             n_slots=max_batch, n_pages=n_pages, page_size=page_size,
-            max_pages_per_seq=self.max_pages_per_seq)
-        assert prefill_mode in ("chunked", "legacy"), prefill_mode
+            max_pages_per_seq=self.max_pages_per_seq,
+            prefix_cache=prefix_cache)
         self.prefill_mode = prefill_mode
         self.chunk_tokens = chunk_pages * page_size
         if self.chunk_tokens > max_seq_len:
@@ -257,6 +271,19 @@ class ContinuousBatchingEngine:
         return {"prefill": self._prefill._cache_size(),
                 "mixed": self._mixed._cache_size(),
                 "decode": self._decode._cache_size()}
+
+    def prefix_cache_stats(self) -> Dict[str, float]:
+        """Cumulative prefix-cache counters: prompt tokens through
+        admission, tokens served from cached pages, the resulting hit
+        rate, and the current cached-page census."""
+        s = self.sched
+        return {"prompt_tokens": s.prefix_prompt_tokens,
+                "hit_tokens": s.prefix_hit_tokens,
+                "hit_rate": (s.prefix_hit_tokens
+                             / max(1, s.prefix_prompt_tokens)),
+                "cached_pages": 0 if s.cache is None else s.cache.n_cached,
+                "unreferenced_pages": (0 if s.cache is None
+                                       else s.cache.n_unreferenced)}
 
     # -- request lifecycle ----------------------------------------------------
 
@@ -465,6 +492,7 @@ class ContinuousBatchingEngine:
         steps0, tokens0 = self.steps_run, self.decode_tokens
         evict0 = self.sched.n_evictions
         mixed0, pf0 = self.mixed_steps, self.prefill_tokens
+        hit0 = self.sched.prefix_hit_tokens
         steps = 0
         while not self.sched.idle:
             progressed = self.step()
@@ -482,4 +510,5 @@ class ContinuousBatchingEngine:
             decode_tokens=self.decode_tokens - tokens0,
             evictions=self.sched.n_evictions - evict0,
             mixed_steps=self.mixed_steps - mixed0,
-            prefill_tokens=self.prefill_tokens - pf0)
+            prefill_tokens=self.prefill_tokens - pf0,
+            prefix_hit_tokens=self.sched.prefix_hit_tokens - hit0)

@@ -24,7 +24,7 @@ page_size tokens per step — O(page) work against the attention's O(T).
 """
 from __future__ import annotations
 
-from typing import List, Optional
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -40,40 +40,90 @@ SCRATCH_PAGE = 0
 # ---------------------------------------------------------------------------
 
 class PageAllocator:
-    """Free-list over physical pages 1..n_pages-1 (page 0 is scratch).
+    """Refcounted free-list over physical pages 1..n_pages-1 (page 0 is
+    scratch). Pages allocate at refcount 1; `incref` shares a page across
+    page tables (prefix-cache hits), and `free` decrements one holder —
+    the page returns to the free list only when its last holder releases.
 
-    `free` is hardened against the two scheduler bugs that silently corrupt
-    a shared pool: double-free (the page re-enters the free list while a
-    sequence still maps it -> cross-sequence KV leakage) and out-of-range
-    ids (a stale page table row scattering into foreign memory)."""
+    `free` keeps the hardening against the two scheduler bugs that silently
+    corrupt a shared pool: double-free (a zero-refcount page re-enters the
+    free list while a sequence still maps it -> cross-sequence KV leakage)
+    and out-of-range ids (a stale page table row scattering into foreign
+    memory).
+
+    A page dropping to refcount 0 is offered to `reclaim_hook` (set by the
+    prefix cache): if the hook claims it, the page is *parked* — neither
+    live nor allocatable — until `adopt` re-references it (a cache hit on a
+    cold page) or `reclaim` returns it to the free list (cache eviction).
+    """
 
     def __init__(self, n_pages: int):
         assert n_pages >= 2, "need at least one allocatable page + scratch"
         self.n_pages = n_pages
         self._free: List[int] = list(range(n_pages - 1, 0, -1))
-        self._allocated: set = set()
+        self._ref: Dict[int, int] = {}
+        self._parked: set = set()
+        self.reclaim_hook: Optional[Callable[[int], bool]] = None
 
     @property
     def n_free(self) -> int:
         return len(self._free)
 
+    @property
+    def n_live(self) -> int:
+        return len(self._ref)
+
+    @property
+    def n_parked(self) -> int:
+        return len(self._parked)
+
+    def refcount(self, page: int) -> int:
+        return self._ref.get(int(page), 0)
+
     def alloc(self, n: int) -> Optional[List[int]]:
-        """n pages or None (all-or-nothing; no partial allocations)."""
+        """n pages at refcount 1 or None (all-or-nothing; no partials)."""
         if n > len(self._free):
             return None
         out = [self._free.pop() for _ in range(n)]
-        self._allocated.update(out)
+        for p in out:
+            self._ref[p] = 1
         return out
 
+    def incref(self, page: int) -> None:
+        """Add a holder to a live page (sharing an existing mapping)."""
+        p = int(page)
+        assert p in self._ref, f"incref of unallocated page {p}"
+        self._ref[p] += 1
+
     def free(self, pages) -> None:
+        """Release one holder per listed page."""
         for p in pages:
             p = int(p)
             assert p != SCRATCH_PAGE, "freeing the scratch page"
             assert 0 < p < self.n_pages, f"page id {p} out of range " \
                 f"[1, {self.n_pages - 1}]"
-            assert p in self._allocated, f"double free of page {p}"
-            self._allocated.discard(p)
-            self._free.append(p)
+            assert p in self._ref, f"double free of page {p}"
+            self._ref[p] -= 1
+            if self._ref[p] == 0:
+                del self._ref[p]
+                if self.reclaim_hook is not None and self.reclaim_hook(p):
+                    self._parked.add(p)
+                else:
+                    self._free.append(p)
+
+    def adopt(self, page: int) -> None:
+        """Re-reference a parked page (prefix-cache hit on a cold page)."""
+        p = int(page)
+        assert p in self._parked, f"adopt of unparked page {p}"
+        self._parked.discard(p)
+        self._ref[p] = 1
+
+    def reclaim(self, page: int) -> None:
+        """Return a parked page to the free list (prefix-cache eviction)."""
+        p = int(page)
+        assert p in self._parked, f"reclaim of unparked page {p}"
+        self._parked.discard(p)
+        self._free.append(p)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,151 @@
+"""Content-addressed prefix cache over the paged KV pool (vLLM-style).
+
+The paper's CoT serving workloads repeat long prompt prefixes across
+requests (few-shot HumanEval/MBPP prompts, slow_think/auto_think system
+preambles), so prefill over a shared prefix is recomputed work. This module
+makes previously-computed prompt pages addressable by content:
+
+  * `page_hashes` hashes each *full* page of prompt token ids with a
+    chained SHA-256 — page i's hash covers page i-1's hash plus page i's
+    tokens, so a hash pins both the tokens and their absolute position
+    window (two prompts only share page i if they agree on every token up
+    through page i).
+  * `PrefixCache` maps hash -> physical page. On admission the scheduler
+    walks a prompt's page hashes and maps the longest cached prefix
+    straight into the request's page table (refcount +1 per hit via
+    `acquire`), scheduling chunked prefill only for the uncached tail.
+    Sharing is safe because only full, immutable pages are cached: the
+    tail — including the prompt's last partial page — is always private,
+    so copy-on-write is never needed mid-page, and a hit is bit-exact with
+    recomputation (page content is a deterministic function of the prefix
+    tokens under page-aligned chunking; int8 pools carry their
+    per-(page, head) scales with the page).
+  * When a cached page's last holder releases it (`PageAllocator`'s
+    `reclaim_hook`), the page *parks* in an LRU instead of the free list —
+    a second-chance free list. `evict` pops cold parked pages back to the
+    allocator when a fresh allocation would otherwise fail; the scheduler
+    only preempts (newest-yields) after the LRU is dry.
+  * Promotion happens when a request *finishes*: `insert` publishes its
+    full prompt pages (decode writes land strictly after them, so they are
+    immutable by then). A hash already cached keeps its original page; the
+    duplicate physical copy is freed normally.
+"""
+from __future__ import annotations
+
+import hashlib
+from collections import OrderedDict
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from repro.serving.kv_pool import PageAllocator
+
+
+def page_hashes(tokens: Sequence[int], page_size: int) -> List[bytes]:
+    """Chained content hash per *full* page of `tokens`:
+    h_i = H(h_{i-1} || tokens[i*page : (i+1)*page]). Partial trailing
+    pages are never hashed (they are never shared)."""
+    out: List[bytes] = []
+    h = b""
+    for i in range(len(tokens) // page_size):
+        window = tokens[i * page_size:(i + 1) * page_size]
+        m = hashlib.sha256(h)
+        m.update(np.asarray(window, np.int32).tobytes())
+        h = m.digest()
+        out.append(h)
+    return out
+
+
+class PrefixCache:
+    """hash -> physical page map + LRU of unreferenced cached pages.
+
+    Installs itself as `alloc.reclaim_hook`; all refcount transitions stay
+    inside `PageAllocator` — this class only decides whether a
+    zero-refcount page parks (cached) or frees (uncached), and in which
+    order parked pages are evicted."""
+
+    def __init__(self, alloc: PageAllocator):
+        self.alloc = alloc
+        self._by_hash: Dict[bytes, int] = {}
+        self._by_page: Dict[int, bytes] = {}
+        self._lru: "OrderedDict[int, None]" = OrderedDict()
+        self.n_evicted = 0
+        alloc.reclaim_hook = self._park
+
+    # -- allocator hook ------------------------------------------------------
+
+    def _park(self, page: int) -> bool:
+        """Claim a page whose refcount just hit 0 iff it is cached; parked
+        pages queue at the MRU end (they were referenced until now)."""
+        if page not in self._by_page:
+            return False
+        self._lru[page] = None
+        self._lru.move_to_end(page)
+        return True
+
+    # -- introspection -------------------------------------------------------
+
+    @property
+    def n_cached(self) -> int:
+        return len(self._by_page)
+
+    @property
+    def n_unreferenced(self) -> int:
+        return len(self._lru)
+
+    # -- admission -----------------------------------------------------------
+
+    def lookup(self, hashes: Sequence[bytes]) -> List[int]:
+        """Physical pages of the longest cached prefix of `hashes`
+        (consecutive from page 0; a gap ends the run)."""
+        out: List[int] = []
+        for h in hashes:
+            page = self._by_hash.get(h)
+            if page is None:
+                break
+            out.append(page)
+        return out
+
+    def acquire(self, pages: Sequence[int]) -> None:
+        """Reference hit pages for a new holder: parked pages leave the LRU
+        (adopt), live ones gain a refcount."""
+        for p in pages:
+            p = int(p)
+            if p in self._lru:
+                del self._lru[p]
+                self.alloc.adopt(p)
+            else:
+                self.alloc.incref(p)
+
+    # -- promotion -----------------------------------------------------------
+
+    def insert(self, hashes: Sequence[bytes], pages: Sequence[int]) -> int:
+        """Publish a finished request's full prompt pages. First writer
+        wins: a hash that is already cached keeps its page (the duplicate
+        copy frees normally). Returns how many pages became cached."""
+        assert len(hashes) == len(pages), (len(hashes), len(pages))
+        n = 0
+        for h, p in zip(hashes, pages):
+            p = int(p)
+            if h in self._by_hash:
+                continue
+            assert p not in self._by_page, \
+                f"page {p} already caches different content"
+            self._by_hash[h] = p
+            self._by_page[p] = h
+            n += 1
+        return n
+
+    # -- eviction ------------------------------------------------------------
+
+    def evict(self, n: int) -> int:
+        """Evict up to n cold parked pages (LRU first) back to the free
+        list, dropping their hash entries. Returns how many were freed."""
+        freed = 0
+        while freed < n and self._lru:
+            page, _ = self._lru.popitem(last=False)
+            del self._by_hash[self._by_page.pop(page)]
+            self.alloc.reclaim(page)
+            self.n_evicted += 1
+            freed += 1
+        return freed

@@ -14,12 +14,25 @@ machinery:
     mixed step under a token budget.
 
 Decode capacity is ensured every step: a sequence crossing a page boundary
-gets a fresh page from the free list; when the pool is exhausted the
-most-recently-admitted other request is preempted (recompute-style: its
-pages are freed — including a partially-prefilled prompt's — and it
-requeues at the front of the FIFO with its progress reset, generation
-restarting from the prompt: the vLLM-style answer to fragmentation-free
-oversubscription).
+gets a fresh page from the free list; when the pool is exhausted, cold
+unreferenced prefix-cache pages are evicted first (LRU — the second-chance
+free list), and only then is the most-recently-admitted active request
+preempted (recompute-style: its pages are released — including a
+partially-prefilled prompt's — and it requeues at the front of the FIFO
+with its progress reset, generation restarting from the prompt: the
+vLLM-style answer to fragmentation-free oversubscription).
+
+With `prefix_cache=True` (chunked admission only), admission walks the
+prompt's chained page hashes (serving/prefix_cache.py) and maps the longest
+cached prefix of *full* pages straight into the request's page table
+(refcount +1 per shared page); `lengths`/`prefill_progress` start at the
+hit length and only the uncached tail is chunk-prefilled. At least one
+prompt token is always recomputed so the last-token logits exist. Finished
+requests promote their full prompt pages into the cache in `complete`.
+Releasing a slot — completion or preemption — only ever *decrements*
+refcounts through the single `_release` choke point: a shared page stays
+mapped for its other holders, and a cached page whose last holder leaves
+parks in the cache LRU instead of the free list.
 
 The device never sees any of this: it gets a dense (n_slots, W) page table,
 per-slot lengths, and last tokens. Inactive slots carry length 0 and a
@@ -35,6 +48,7 @@ from typing import Deque, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.serving.kv_pool import PageAllocator, SCRATCH_PAGE
+from repro.serving.prefix_cache import PrefixCache, page_hashes
 
 
 @dataclasses.dataclass
@@ -51,11 +65,13 @@ class Request:
 
 class PagedScheduler:
     def __init__(self, *, n_slots: int, n_pages: int, page_size: int,
-                 max_pages_per_seq: int):
+                 max_pages_per_seq: int, prefix_cache: bool = False):
         self.n_slots = n_slots
         self.page_size = page_size
         self.max_pages_per_seq = max_pages_per_seq
         self.alloc = PageAllocator(n_pages)
+        self.cache: Optional[PrefixCache] = \
+            PrefixCache(self.alloc) if prefix_cache else None
         self.page_table = np.full((n_slots, max_pages_per_seq), SCRATCH_PAGE,
                                   np.int32)
         self.lengths = np.zeros(n_slots, np.int32)      # tokens in cache
@@ -66,7 +82,10 @@ class PagedScheduler:
         self.free_slots: List[int] = list(range(n_slots - 1, -1, -1))
         self._admit_order: Dict[int, int] = {}          # slot -> seqno
         self._admit_seq = 0
+        self._hashes: Dict[int, List[bytes]] = {}       # slot -> page hashes
         self.n_evictions = 0
+        self.prefix_hit_tokens = 0       # prompt tokens served from cache
+        self.prefix_prompt_tokens = 0    # prompt tokens through admission
 
     # -- queue ---------------------------------------------------------------
 
@@ -82,6 +101,19 @@ class PagedScheduler:
     def idle(self) -> bool:
         return not self.active and not self.waiting
 
+    # -- allocation ----------------------------------------------------------
+
+    def _alloc_pages(self, n: int) -> Optional[List[int]]:
+        """All-or-nothing alloc with second-chance eviction: when the free
+        list is short, cold unreferenced prefix-cache pages are evicted
+        (LRU first) before giving up — callers preempt only after this
+        returns None."""
+        pages = self.alloc.alloc(n)
+        if pages is None and self.cache is not None:
+            self.cache.evict(n - self.alloc.n_free)
+            pages = self.alloc.alloc(n)
+        return pages
+
     # -- admission -----------------------------------------------------------
 
     def admit(self, max_prefill_pages: Optional[int] = None
@@ -90,31 +122,58 @@ class PagedScheduler:
 
         max_prefill_pages=None (legacy per-admission prefill): a request
         needs all its prompt pages up front and enters fully prefilled
-        (the caller runs the one-shot prefill right after).
+        (the caller runs the one-shot prefill right after). The prefix
+        cache is bypassed — the one-shot prefill would rewrite shared
+        pages.
 
-        max_prefill_pages=k (chunked prefill): a request needs only its
-        first chunk's pages — min(prompt pages, k) — and enters with
-        prefill_progress 0; later chunks grow the page list via grow_to."""
+        max_prefill_pages=k (chunked prefill): the longest cached prefix of
+        full prompt pages (if any) maps directly into the page table with a
+        refcount each, then the request needs only its first uncached
+        chunk's pages — min(tail pages, k) — and enters with
+        prefill_progress at the hit length; later chunks grow the page list
+        via grow_to. At least one prompt token is always left to recompute
+        so the mixed step produces last-token logits."""
         admitted = []
+        use_cache = self.cache is not None and max_prefill_pages is not None
         while self.waiting and self.free_slots:
             req = self.waiting[0]
-            need = -(-len(req.prompt) // self.page_size)
+            total = -(-len(req.prompt) // self.page_size)
+            hashes: List[bytes] = []
+            hits: List[int] = []
+            if use_cache:
+                hashes = page_hashes(req.prompt, self.page_size)
+                hits = self.cache.lookup(hashes)
+                if len(hits) * self.page_size >= len(req.prompt):
+                    hits = hits[:-1]
+            n_hit = len(hits)
+            need = total - n_hit
             if max_prefill_pages is not None:
                 need = min(need, max_prefill_pages)
-            pages = self.alloc.alloc(need)
+            if hits:
+                # reference the hits before allocating the tail, so tail
+                # eviction can never reclaim them out from under us
+                self.cache.acquire(hits)
+            pages = self._alloc_pages(need)
             if pages is None:
+                if hits:
+                    self.alloc.free(hits)       # back to live/LRU state
                 break
             self.waiting.popleft()
             slot = self.free_slots.pop()
-            self.seq_pages[slot] = pages
+            self.seq_pages[slot] = hits + pages
             self.page_table[slot, :] = SCRATCH_PAGE
-            self.page_table[slot, :need] = pages
+            self.page_table[slot, :n_hit + need] = hits + pages
+            hit_tokens = n_hit * self.page_size
             if max_prefill_pages is None:
                 self.lengths[slot] = len(req.prompt)
                 self.prefill_progress[slot] = len(req.prompt)
             else:
-                self.lengths[slot] = 0
-                self.prefill_progress[slot] = 0
+                self.lengths[slot] = hit_tokens
+                self.prefill_progress[slot] = hit_tokens
+            if use_cache:
+                self._hashes[slot] = hashes
+                self.prefix_hit_tokens += hit_tokens
+                self.prefix_prompt_tokens += len(req.prompt)
             self.active[slot] = req
             self._admit_order[slot] = self._admit_seq
             self._admit_seq += 1
@@ -138,8 +197,9 @@ class PagedScheduler:
 
     def grow_to(self, slot: int, n_tokens: int) -> List[Request]:
         """Grow `slot`'s page list to cover `n_tokens` cache positions,
-        preempting the most-recently-admitted active request when the pool
-        is dry — *including the grower itself*: a newest slot that can't
+        evicting cold prefix-cache pages and then preempting the
+        most-recently-admitted active request when the pool is dry —
+        *including the grower itself*: a newest slot that can't
         grow yields (self-preempts) rather than starving older work, so the
         oldest request always makes monotonic progress and mutual-eviction
         livelock is impossible. Returns the preempted (requeued) requests —
@@ -153,7 +213,7 @@ class PagedScheduler:
                 f"sequence in slot {slot} exceeded max_pages_per_seq")
         evicted = []
         while need_pages > len(self.seq_pages[slot]):
-            page = self.alloc.alloc(1)
+            page = self._alloc_pages(1)
             if page is None:
                 if len(self.active) <= 1:
                     raise RuntimeError(
@@ -179,14 +239,23 @@ class PagedScheduler:
             evicted.extend(self.grow_to(slot, int(self.lengths[slot]) + 1))
         return evicted
 
+    def _return_pages(self, pages: List[int]) -> None:
+        """THE page-release choke point: every refcount decrement the
+        scheduler performs funnels through here (completion and preemption
+        both route via `_release`). A shared page only loses this holder;
+        a cached page whose last holder leaves parks in the prefix-cache
+        LRU instead of the free list."""
+        self.alloc.free(pages)
+
     def _release(self, slot: int) -> Request:
         req = self.active.pop(slot)
-        self.alloc.free(self.seq_pages[slot])
+        self._return_pages(self.seq_pages[slot])
         self.seq_pages[slot] = []
         self.page_table[slot, :] = SCRATCH_PAGE
         self.lengths[slot] = 0
         self.prefill_progress[slot] = 0
         self._admit_order.pop(slot, None)
+        self._hashes.pop(slot, None)
         self.free_slots.append(slot)
         return req
 
@@ -201,4 +270,15 @@ class PagedScheduler:
     # -- completion ----------------------------------------------------------
 
     def complete(self, slot: int) -> Request:
+        """Finish a request: promote its *full* prompt pages into the
+        prefix cache (immutable by now — the partial tail page and decode
+        writes land strictly after them), then release the slot."""
+        if self.cache is not None:
+            req = self.active[slot]
+            n_full = len(req.prompt) // self.page_size
+            hashes = self._hashes.get(slot)
+            if hashes is None:
+                hashes = page_hashes(req.prompt, self.page_size)
+            self.cache.insert(hashes[:n_full],
+                              self.seq_pages[slot][:n_full])
         return self._release(slot)

@@ -111,6 +111,61 @@ def test_rotation_preserves_matmul(x, w):
                                rtol=1e-2, atol=1e-2)
 
 
+# -- refcounted page allocator ------------------------------------------------------
+
+@_settings
+@given(st.lists(st.tuples(st.integers(0, 5), st.integers(0, 6)),
+                min_size=1, max_size=60),
+       st.integers(3, 12))
+def test_page_allocator_refcount_invariants(ops, n_pages):
+    """Random alloc/share/free/cache interleavings against a mirror model:
+    no double-free, no leak, and every page is always in exactly one of
+    {free, live, parked} — n_free + n_live + n_parked == n_pages - 1."""
+    from repro.serving.kv_pool import PageAllocator
+    a = PageAllocator(n_pages)
+    cached: set = set()                       # mini prefix cache: park these
+    parked: list = []                         # mirror of the LRU
+    a.reclaim_hook = lambda p: p in cached and (parked.append(p) or True)
+    live: dict = {}                           # page -> expected refcount
+    for op, arg in ops:
+        if op == 0:                           # alloc 1..arg pages
+            got = a.alloc(arg % 3 + 1)
+            if got is not None:
+                for p in got:
+                    assert p not in live and p not in parked
+                    live[p] = 1
+        elif op == 1 and live:                # share an existing mapping
+            p = sorted(live)[arg % len(live)]
+            a.incref(p)
+            live[p] += 1
+        elif op == 2 and live:                # release one holder
+            p = sorted(live)[arg % len(live)]
+            a.free([p])
+            live[p] -= 1
+            if live[p] == 0:
+                del live[p]
+        elif op == 3 and live:                # promote into the cache
+            cached.add(sorted(live)[arg % len(live)])
+        elif op == 4 and parked:              # cache hit on a cold page
+            p = parked.pop(arg % len(parked))
+            a.adopt(p)
+            live[p] = 1
+        elif op == 5 and parked:              # cache eviction
+            p = parked.pop(arg % len(parked))
+            a.reclaim(p)
+            cached.discard(p)
+        assert a.n_live == len(live)
+        assert a.n_parked == len(parked)
+        assert all(a.refcount(p) == n for p, n in live.items())
+        assert a.n_free + a.n_live + a.n_parked == n_pages - 1
+    # drain everything: the pool must come back whole (no leak)
+    for p, n in list(live.items()):
+        a.free([p] * n)
+    for p in list(parked):
+        a.reclaim(p)
+    assert a.n_free == n_pages - 1 and a.n_live == 0 and a.n_parked == 0
+
+
 # -- repetition detector -------------------------------------------------------------
 
 @_settings
