@@ -23,10 +23,29 @@ Reports (and asserts, so the bench doubles as an acceptance gate):
   * refcounted prefix caching: on a batch-8 workload sharing a 6-page
     system prompt, a warm cache cuts mean TTFT >= 2x vs the cold first
     batch (hit rate >= 0.5 on re-submission) without regressing the
-    decode-step latency floor by more than 5% vs a cache-off engine.
+    decode-step latency floor by more than 5% vs a cache-off engine;
+  * self-speculative decoding (n-gram drafting + batched verify): >= 1.3x
+    decode tok/s over the non-speculative engine at batch 8 on a
+    repetitive (n-gram-friendly) workload with bit-exact greedy outputs
+    on bf16 pools, <= 5% decode tok/s regression on an adversarial
+    (low-acceptance) workload with int8 pools, and at most 3 steady-state
+    programs (mixed + decode + verify; still zero one-shot prefills).
+
+The speculative workloads are fixed (seed, prompt-index) picks into
+make_prompts under this file's reduced pangu_1b config and PRNGKey(0)
+weights: the friendly set is the 8 lanes whose greedy bf16 continuations
+loop earliest (most drafter-predictable), the adversarial set 8 lanes
+whose continuations never repeat an n-gram. The 1.3x/bit-exact gate runs
+on bf16 pools because int8 page scales are recomputed from full-page
+content on every write — a vanilla decode re-rounds the page token by
+token, so each position sees a slightly different effective cache than
+one shared-K verify pass can reproduce; int8 friendly numbers are
+reported (acceptance rate, speedup) but only the regression bound is
+gated there.
 
 --json PATH dumps every reported metric as a JSON document (CI uploads it
-as an artifact so runs are comparable across commits).
+as an artifact so runs are comparable across commits) — including decode
+tok/s, TTFT percentiles, and speculative acceptance rates.
 
 Throughput is measured on the jitted XLA paged path: interpret-mode Pallas
 re-traces the kernel grid in Python and measures the interpreter, not the
@@ -59,6 +78,22 @@ from repro.serving import ContinuousBatchingEngine     # noqa: E402
 
 PAGE = 16
 CHUNK_PAGES = 2
+
+# speculative workloads: (make_prompts seed, prompt index) under
+# DataConfig(vocab=cfg.vocab, seq_len=64), 8 prompts of 24 tokens per seed
+# — see the module docstring for how these lanes were picked and why the
+# bit-exact gate runs on bf16 pools
+SPEC_FRIENDLY = [(23, 2), (18, 2), (17, 1), (3, 2),
+                 (27, 2), (21, 6), (16, 2), (25, 7)]
+SPEC_ADVERSARIAL = [(12, 0), (17, 4), (32, 3), (29, 0),
+                    (8, 4), (31, 7), (3, 5), (12, 1)]
+SPEC_PROMPT_LEN = 24
+SPEC_MAX_NEW = 256
+SPEC_SEQ_LEN = 320
+SPEC_K = 8
+# one page of a fixed token plus a ramp: loops immediately, so one warmup
+# run compiles the verify program alongside mixed + decode
+SPEC_WARM_PROMPT = [7] * 8 + list(range(16))
 
 
 def make_engine(params, cfg, *, kv_bits, max_batch, max_seq_len,
@@ -108,6 +143,7 @@ def prefill_metrics(eng, prompts, max_new=8):
     return {"prefill_tok_s": n_prompt / prefill_s,
             "ttft_mean_ms": 1e3 * float(np.mean(list(ttft.values()))),
             "ttft_max_ms": 1e3 * float(np.max(list(ttft.values()))),
+            "ttft_all_ms": [1e3 * t for t in ttft.values()],
             "decode_dts": dts}
 
 
@@ -120,9 +156,13 @@ def best_prefill(eng, prompts, reps=3, max_new=8):
     runs = [prefill_metrics(eng, prompts, max_new=max_new)
             for _ in range(reps)]
     dts = [d for r in runs for d in r["decode_dts"]]
+    ttfts = [t for r in runs for t in r["ttft_all_ms"]]
     return {"prefill_tok_s": max(r["prefill_tok_s"] for r in runs),
             "ttft_mean_ms": min(r["ttft_mean_ms"] for r in runs),
             "ttft_max_ms": min(r["ttft_max_ms"] for r in runs),
+            "ttft_percentiles_ms": {
+                f"p{q}": float(np.percentile(ttfts, q))
+                for q in (50, 90, 99)},
             "decode_ms": (1e3 * float(np.percentile(dts, 10)) if dts
                           else float("nan"))}
 
@@ -144,6 +184,47 @@ def decode_floor(eng, prompts, max_new, reps=3):
             dts.append(time.perf_counter() - t0)
         best = min(best, min(dts))
     return 1e3 * best
+
+
+def spec_prompts(cfg, keys):
+    """Materialize a fixed speculative workload: prompt `i` of the 8-prompt
+    batch make_prompts generates under `seed`, for each (seed, i) key."""
+    out = []
+    for seed, i in keys:
+        ps = make_prompts(DataConfig(vocab=cfg.vocab, seq_len=64, seed=seed),
+                          8, SPEC_PROMPT_LEN)
+        out.append(list(ps[i]))
+    return out
+
+
+def spec_engine(params, cfg, *, kv_bits, k):
+    return ContinuousBatchingEngine(
+        params, cfg, kv_bits=kv_bits, page_size=PAGE, max_batch=8,
+        max_seq_len=SPEC_SEQ_LEN, prefill_mode="chunked",
+        chunk_pages=CHUNK_PAGES, token_budget=8 * CHUNK_PAGES * PAGE,
+        prefix_cache=True, spec_decode=k)
+
+
+def decode_tok_s_pair(eng_a, eng_b, prompts, max_new=SPEC_MAX_NEW, reps=4):
+    """Best-of-reps end-to-end decode throughput for two engines on the
+    same workload (decode-dominated: 24-token prompts, 256 generated
+    tokens/lane). Reps alternate engines so a drifting box slows both
+    sides alike — two back-to-back solo measurements decorrelate and can
+    swing a throughput *ratio* by more than the 5% the adversarial gate
+    bounds."""
+    out = []
+    for eng in (eng_a, eng_b):
+        eng.run([SPEC_WARM_PROMPT], max_new=32)   # compiles verify too
+        out.append([0.0, None])
+    for _ in range(reps):
+        for eng, slot in zip((eng_a, eng_b), out):
+            t0 = time.time()
+            r = eng.run(prompts, max_new=max_new)
+            dt = time.time() - t0
+            tps = sum(len(t) for t in r.tokens) / dt
+            if tps > slot[0]:
+                slot[0], slot[1] = tps, r
+    return out[0][0], out[0][1], out[1][0], out[1][1]
 
 
 def main(argv=None):
@@ -230,7 +311,7 @@ def main(argv=None):
     cc_ch = engines["chunked"].compile_counts()
     cc_leg = engines["legacy"].compile_counts()
     print(f"# compile counts: chunked={cc_ch} legacy={cc_leg}")
-    if cc_ch != {"prefill": 0, "mixed": 1, "decode": 1}:
+    if cc_ch != {"prefill": 0, "mixed": 1, "decode": 1, "verify": 0}:
         ok = False
         print(f"FAIL: chunked engine is not two-program steady state: "
               f"{cc_ch}")
@@ -287,6 +368,56 @@ def main(argv=None):
               f"{px_lat:.2f} > 1.05")
     px_stats = eng_on.prefix_cache_stats()
 
+    # -- speculative decoding at batch 8 ------------------------------------
+    friendly = spec_prompts(cfg, SPEC_FRIENDLY)
+    adversarial = spec_prompts(cfg, SPEC_ADVERSARIAL)
+    spec = {"k": SPEC_K, "decode_tok_s": {}, "acceptance_rate": {}}
+    for kv_bits in (16, 8):
+        tag = "bf16" if kv_bits == 16 else "int8"
+        van = spec_engine(params, cfg, kv_bits=kv_bits, k=0)
+        sp = spec_engine(params, cfg, kv_bits=kv_bits, k=SPEC_K)
+        v_f, rv, s_f, rs = decode_tok_s_pair(van, sp, friendly)
+        spec["decode_tok_s"][f"vanilla_{tag}"] = v_f
+        spec["decode_tok_s"][f"spec_{tag}"] = s_f
+        spec[f"friendly_speedup_{tag}"] = s_f / v_f
+        spec["acceptance_rate"][tag] = sp.spec_stats()["acceptance_rate"]
+        if kv_bits == 16:
+            spec["bit_exact_greedy_bf16"] = all(
+                list(a) == list(b) for a, b in zip(rv.tokens, rs.tokens))
+        else:
+            v_a, _, s_a, _ = decode_tok_s_pair(van, sp, adversarial)
+            spec["decode_tok_s"]["vanilla_int8_adversarial"] = v_a
+            spec["decode_tok_s"]["spec_int8_adversarial"] = s_a
+            spec["adversarial_ratio_int8"] = s_a / v_a
+            spec["compile_counts"] = sp.compile_counts()
+    print(f"# speculative (k={SPEC_K}): friendly bf16 "
+          f"{spec['decode_tok_s']['vanilla_bf16']:.0f} -> "
+          f"{spec['decode_tok_s']['spec_bf16']:.0f} tok/s "
+          f"({spec['friendly_speedup_bf16']:.2f}x, acc "
+          f"{spec['acceptance_rate']['bf16']:.2f}, bit-exact "
+          f"{spec['bit_exact_greedy_bf16']}); friendly int8 "
+          f"{spec['friendly_speedup_int8']:.2f}x (acc "
+          f"{spec['acceptance_rate']['int8']:.2f}); adversarial int8 "
+          f"{spec['adversarial_ratio_int8']:.2f}x; compile "
+          f"{spec['compile_counts']}")
+    if spec["friendly_speedup_bf16"] < 1.3:
+        ok = False
+        print(f"FAIL: speculative friendly speedup "
+              f"{spec['friendly_speedup_bf16']:.2f}x < 1.3x")
+    if not spec["bit_exact_greedy_bf16"]:
+        ok = False
+        print("FAIL: speculative greedy tokens diverge from vanilla (bf16)")
+    if spec["adversarial_ratio_int8"] < 0.95:
+        ok = False
+        print(f"FAIL: speculative adversarial ratio "
+              f"{spec['adversarial_ratio_int8']:.2f}x < 0.95x")
+    cc_spec = spec["compile_counts"]
+    if cc_spec["prefill"] + cc_spec["mixed"] + cc_spec["decode"] + \
+            cc_spec["verify"] > 3:
+        ok = False
+        print(f"FAIL: speculative engine exceeds 3 steady-state programs: "
+              f"{cc_spec}")
+
     # -- throughput sweep ---------------------------------------------------
     tput = {}
     if batches:
@@ -336,6 +467,7 @@ def main(argv=None):
                 "decode_latency_ratio": px_lat,
                 "engine_stats": px_stats,
             },
+            "speculative": spec,
             "throughput_tok_s": {f"kv{k}_b{b}": v
                                  for (k, b), v in tput.items()},
             "pass": ok,

@@ -3,9 +3,11 @@
 #   1. quantlint — AST rules + jaxpr dtype-flow invariants over src/ (blocking)
 #   2. pytest    — the tier-1 test suite
 #   3. serving bench (smoke) — KV bytes ratio, chunked-prefill speedup,
-#      prefix-cache warm-TTFT/hit-rate/decode-floor gates, decode-latency
-#      and compile-count gates, pallas==xla token parity; metrics land in
-#      bench_smoke.json (uploaded as a CI artifact)
+#      prefix-cache warm-TTFT/hit-rate/decode-floor gates, speculative
+#      decoding gates (friendly speedup + bit-exact greedy, adversarial
+#      regression bound), decode-latency and compile-count gates,
+#      pallas==xla token parity; metrics land in bench_smoke.json
+#      (uploaded as a CI artifact)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}

@@ -269,6 +269,52 @@ def spec_serving_prefill_chunk_cached() -> TraceSpec:
                      auto_tags(args))
 
 
+def spec_serving_verify_step() -> TraceSpec:
+    """The speculative-verify step: a k+1-token draft window (unaligned —
+    here C = 5) scored read-only by the multi-query chunk-attention read
+    (raw window K/V spliced over the gathered int8 pages) against a page
+    table holding pages this request never wrote (a cached/previously-
+    committed prefix), then the accepted prefix committed through the
+    fused quantize-on-write path. Each cached page's per-(page, head)
+    scale must be applied exactly once on the read side, and the commit's
+    requantization must keep int8 storage dtypes."""
+    from repro.configs import get_arch, reduced
+    from repro.models import transformer
+    from repro.serving import kv_pool
+    cfg = reduced(get_arch("pangu_1b"))
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    b, page, n_pages, w, c = 2, 8, 9, 4, 5
+    wc = kv_pool.verify_window_pages(c, page)
+    pools = transformer.init_paged_pools(cfg, n_pages, page, kv_bits=8)
+    # rows 1..2 hold the committed prefix (written by earlier steps, so
+    # the verify read never re-rounds them); the window starts mid-page 3
+    page_table = jnp.asarray(
+        np.arange(1, 1 + w, dtype=np.int32)[None].repeat(b, 0))
+    window_rows = jnp.asarray(
+        np.arange(3, 3 + wc, dtype=np.int32)[None].repeat(b, 0))
+    tokens = jnp.zeros((b, c), jnp.int32)
+    q_start = jnp.full((b,), 2 * page + 3, jnp.int32)   # unaligned start
+    n_new = jnp.full((b,), c, jnp.int32)
+    n_keep = jnp.full((b,), 3, jnp.int32)               # accept 2 + bonus
+
+    def step(params, pools, page_table, window_rows, tokens, q_start,
+             n_new, n_keep):
+        logits, kv_win = transformer.verify_step_paged(
+            params, pools, page_table, tokens, q_start, n_new,
+            cfg, paged_impl="xla")
+        out = {}
+        for i in pools:
+            kw, vw = kv_win[i]
+            out[i] = jax.vmap(kv_pool.write_chunk,
+                              in_axes=(0, 0, 0, None, None, None))(
+                pools[i], kw, vw, window_rows, q_start, n_keep)
+        return logits, out
+
+    args = (params, pools, page_table, window_rows, tokens, q_start,
+            n_new, n_keep)
+    return TraceSpec("serving_verify_step", step, args, auto_tags(args))
+
+
 def default_specs(*, fast: bool = False) -> List[TraceSpec]:
     specs = [
         spec_int8_gemm(),
@@ -284,4 +330,5 @@ def default_specs(*, fast: bool = False) -> List[TraceSpec]:
         specs.append(spec_serving_decode())
         specs.append(spec_serving_prefill_chunk())
         specs.append(spec_serving_prefill_chunk_cached())
+        specs.append(spec_serving_verify_step())
     return specs

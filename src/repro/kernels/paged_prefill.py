@@ -36,7 +36,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import ops, tpu_compiler_params
-from repro.kernels.ref import paged_prefill_attention_ref  # noqa: F401  (oracle)
+from repro.kernels.ref import (  # noqa: F401  (oracles)
+    paged_prefill_attention_ref, paged_verify_attention_ref)
 
 NEG_INF = -1e30
 
@@ -141,3 +142,25 @@ def paged_prefill_attention(q, k_pages, v_pages, k_scale, v_scale,
       qg, k_pages, v_pages, k_scale, v_scale)
     return (out.reshape(b, nkv, c, hper, hd).transpose(0, 2, 1, 3, 4)
             .reshape(b, c, nq, hd))
+
+
+def paged_verify_attention(q, k_pages, v_pages, k_scale, v_scale,
+                           page_table, q_start, n_new, k_win, v_win, *,
+                           interpret: bool = False):
+    """Multi-query-per-sequence decode variant for speculative verify:
+    causal-masked chunk attention with the valid-key horizon pinned to the
+    draft window's end (kv_lengths = q_start + n_new) and the window's raw
+    K/V (k_win/v_win) spliced over the gathered keys, so the pool is never
+    written for a draft that may be rejected. C = k+1 need not be
+    page-aligned (window-sizing via kv_pool.verify_window_pages, not
+    chunk_window_pages).
+
+    The streaming Pallas chunk kernel reads pages only; feeding it the
+    in-flight window would need an extra VMEM operand (ROADMAP), so the
+    verify step currently runs the XLA gather path on every backend —
+    identical math, and the per-step cost is one page-table gather, same
+    as the kernel's contract. Contract: `ref.paged_verify_attention_ref`."""
+    del interpret  # no Pallas variant yet; XLA gather path on all backends
+    return paged_verify_attention_ref(q, k_pages, v_pages, k_scale, v_scale,
+                                      page_table, q_start, n_new,
+                                      k_win, v_win)

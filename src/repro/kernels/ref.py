@@ -125,28 +125,79 @@ def paged_prefill_attention_ref(q, k_pages, v_pages, k_scale, v_scale,
     Query i sees keys at kpos <= q_start[b] + i with kpos < kv_lengths[b].
     Returns (B, C, nq, hd) in q.dtype.
     """
+    return _chunk_attend(q, _read_pages(k_pages, k_scale, page_table),
+                         _read_pages(v_pages, v_scale, page_table),
+                         q_start, kv_lengths)
+
+
+def _read_pages(pages, scales, page_table):
+    """Gather + dequantize a page table's worth of KV: (B, W*page, nkv, hd)
+    f32."""
+    b, w = page_table.shape
+    _, page, nkv, hd = pages.shape
+    g = pages[page_table].astype(jnp.float32)          # (B, W, page, nkv, hd)
+    if pages.dtype == jnp.int8:
+        g = g * scales[page_table][:, :, None, :, None]
+    return g.reshape(b, w * page, nkv, hd)
+
+
+def _chunk_attend(q, k, v, q_start, kv_lengths):
+    """Causal chunk-query attention over dense per-sequence keys: query i
+    (absolute position q_start[b] + i) sees kpos <= q_start[b] + i with
+    kpos < kv_lengths[b].
+
+    GQA is expressed with an explicit group axis (einsum broadcasts the
+    shared K/V head over its `hper` queries) rather than jnp.repeat —
+    materializing the repeated K/V costs ~2x the whole attention on the
+    XLA CPU path, and the grouped contraction is bitwise identical (the
+    per-(query, key) dot over hd is unchanged)."""
     b, c, nq, hd = q.shape
-    _, page, nkv, _ = k_pages.shape
-    w = page_table.shape[1]
+    t, nkv = k.shape[1], k.shape[2]
     hper = nq // nkv
-
-    def read(pages, scales):
-        g = pages[page_table].astype(jnp.float32)      # (B, W, page, nkv, hd)
-        if pages.dtype == jnp.int8:
-            g = g * scales[page_table][:, :, None, :, None]
-        return g.reshape(b, w * page, nkv, hd)
-
-    k = read(k_pages, k_scale)
-    v = read(v_pages, v_scale)
-    if hper > 1:
-        k = jnp.repeat(k, hper, axis=2)
-        v = jnp.repeat(v, hper, axis=2)
-    qf = q.astype(jnp.float32) / (hd ** 0.5)
-    scores = jnp.einsum("bchd,bthd->bhct", qf, k)
-    kpos = jnp.arange(w * page)[None, None, None, :]
-    qpos = (q_start[:, None] + jnp.arange(c)[None, :])[:, None, :, None]
-    mask = (kpos <= qpos) & (kpos < kv_lengths[:, None, None, None])
+    qg = q.reshape(b, c, nkv, hper, hd).astype(jnp.float32) / (hd ** 0.5)
+    scores = jnp.einsum("bcgph,btgh->bgpct", qg, k)
+    kpos = jnp.arange(t)[None, None, None, None, :]
+    qpos = (q_start[:, None] + jnp.arange(c)[None, :])[:, None, None, :, None]
+    mask = (kpos <= qpos) & (kpos < kv_lengths[:, None, None, None, None])
     scores = jnp.where(mask, scores, PAGED_NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1)
-    out = jnp.einsum("bhct,bthd->bchd", probs, v)
-    return out.astype(q.dtype)
+    out = jnp.einsum("bgpct,btgh->bcgph", probs, v)
+    return out.reshape(b, c, nq, hd).astype(q.dtype)
+
+
+def paged_verify_attention_ref(q, k_pages, v_pages, k_scale, v_scale,
+                               page_table, q_start, n_new, k_win, v_win):
+    """Multi-query-per-sequence decode (speculative verify), read-only on
+    the pool: the C-token draft window's raw K/V projections (k_win/v_win,
+    (B, C, nkv, hd)) are spliced over the gathered past keys at positions
+    q_start..q_start+C-1 instead of being written into pages first, so a
+    rejected draft never touches the pool. The valid-key horizon is the
+    window end — kv_lengths = q_start + n_new — and the causal chunk mask
+    handles the intra-window triangle; C need not be page-aligned (k+1
+    draft tokens); max(.., 1) keeps idle lanes (n_new == 0) finite so
+    their garbage rows still softmax over a nonempty prefix.
+
+    For float pools the splice is bit-identical to a write + paged read
+    (the page round trip is a no-op cast); for int8 pools the window skips
+    one quantize-dequantize round trip, so verify logits can differ from
+    the written-then-read chain within quantization noise."""
+    c = q.shape[1]
+    page = k_pages.shape[1]
+    kv_lengths = jnp.maximum(q_start + n_new, 1)
+    # extend the *table* (not the gathered data) by enough pages that the
+    # per-batch splice never clamps near the end of a full sequence
+    # (q_start <= W*page - 1 by the scheduler's capacity invariant): the
+    # pad columns only ever hold window rows >= n_new, which kv_lengths
+    # masks off, so any valid page id works as filler
+    pad = -(-max(c - 1, 1) // page)
+    ext = jnp.concatenate([page_table] + [page_table[:, :1]] * pad, axis=1)
+
+    def inject(pages, scales, wnd):
+        dense = _read_pages(pages, scales, ext)
+        return jax.vmap(
+            lambda db, wb, s: jax.lax.dynamic_update_slice(
+                db, wb.astype(db.dtype), (s, 0, 0)))(dense, wnd, q_start)
+
+    k = inject(k_pages, k_scale, k_win)
+    v = inject(v_pages, v_scale, v_win)
+    return _chunk_attend(q, k, v, q_start, kv_lengths)

@@ -26,6 +26,38 @@ from repro.models import transformer
 from repro.serving import ContinuousBatchingEngine, ServingEngine
 
 
+def _validate(ap: argparse.ArgumentParser, args) -> None:
+    """Fail fast on invalid flag combinations with a CLI-level error
+    (argparse usage + exit 2) instead of tripping an assert or ValueError
+    deep inside the engine after model init and PTQ."""
+    if args.prefill_mode == "legacy" and args.prefix_cache == "on":
+        ap.error("--prefix-cache on requires --prefill-mode chunked "
+                 "(one-shot legacy prefill would rewrite shared pages)")
+    if args.spec_decode < 0:
+        ap.error("--spec-decode must be >= 0")
+    if args.spec_decode and args.prefill_mode == "legacy":
+        ap.error("--spec-decode requires --prefill-mode chunked (the "
+                 "verify step reuses the chunk-attention machinery)")
+    if args.spec_decode and args.engine != "continuous":
+        ap.error("--spec-decode requires --engine continuous")
+    if args.engine == "continuous":
+        if args.chunk_pages < 1:
+            ap.error("--chunk-pages must be >= 1")
+        if args.chunk_pages * args.page_size > args.max_seq_len:
+            ap.error(f"--chunk-pages {args.chunk_pages} x --page-size "
+                     f"{args.page_size} exceeds --max-seq-len "
+                     f"{args.max_seq_len}")
+        if args.prompt_len + args.max_new > args.max_seq_len:
+            ap.error(f"--prompt-len {args.prompt_len} + --max-new "
+                     f"{args.max_new} exceeds --max-seq-len "
+                     f"{args.max_seq_len}; raise --max-seq-len")
+    if args.sampler == "temperature":
+        if args.temperature <= 0:
+            ap.error("--temperature must be > 0")
+        if not 0 < args.top_p <= 1:
+            ap.error("--top-p must be in (0, 1]")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -50,9 +82,24 @@ def main(argv=None):
     ap.add_argument("--token-budget", type=int, default=None,
                     help="per-step token budget across prefill chunks and "
                     "decode lanes (default: one chunk + all decode lanes)")
-    ap.add_argument("--prefix-cache", default="on", choices=["on", "off"],
+    ap.add_argument("--prefix-cache", default=None, choices=["on", "off"],
                     help="share quantized prompt pages across requests via "
-                    "refcounted page-table entries (chunked mode only)")
+                    "refcounted page-table entries (chunked mode only; "
+                    "default: on for chunked, off for legacy)")
+    ap.add_argument("--spec-decode", type=int, default=0, metavar="K",
+                    help="draft-free speculative decoding: propose up to K "
+                    "tokens per sequence per step via n-gram prompt lookup "
+                    "and verify them in one batched step (chunked mode "
+                    "only; 0 disables)")
+    ap.add_argument("--sampler", default="greedy",
+                    choices=["greedy", "temperature"],
+                    help="token sampler; temperature uses rejection-"
+                    "sampling acceptance under --spec-decode")
+    ap.add_argument("--temperature", type=float, default=0.8,
+                    help="softmax temperature for --sampler temperature")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus filter for --sampler temperature "
+                    "(1.0 disables)")
     ap.add_argument("--ckpt-dir", default=None,
                     help="restore trained weights (else random init)")
     ap.add_argument("--requests", type=int, default=8)
@@ -63,6 +110,7 @@ def main(argv=None):
     ap.add_argument("--calib-batches", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    _validate(ap, args)
 
     cfg = get_arch(args.arch)
     if args.reduced:
@@ -89,17 +137,17 @@ def main(argv=None):
     prompts = make_prompts(DataConfig(vocab=cfg.vocab, seq_len=64),
                            args.requests, args.prompt_len)
     if args.engine == "continuous":
-        use_cache = args.prefix_cache == "on"
-        if use_cache and args.prefill_mode == "legacy":
-            print("[serve] prefix cache requires chunked prefill; "
-                  "disabling for --prefill-mode legacy")
-            use_cache = False
+        use_cache = (args.prefill_mode == "chunked"
+                     if args.prefix_cache is None
+                     else args.prefix_cache == "on")
         eng = ContinuousBatchingEngine(
             params, cfg, qcfg=qcfg, impl=impl, kv_bits=args.kv_bits,
             page_size=args.page_size, max_batch=args.max_batch,
             max_seq_len=args.max_seq_len, paged_impl=args.paged_impl,
             prefill_mode=args.prefill_mode, chunk_pages=args.chunk_pages,
-            token_budget=args.token_budget, prefix_cache=use_cache)
+            token_budget=args.token_budget, prefix_cache=use_cache,
+            spec_decode=args.spec_decode, sampler=args.sampler,
+            temperature=args.temperature, top_p=args.top_p, seed=args.seed)
         mode = "slow_think" if args.mode == "all" else args.mode
         t0 = time.time()
         res = eng.run(prompts, mode=mode, max_new=args.max_new)
@@ -111,6 +159,11 @@ def main(argv=None):
               f"{res.prefill_tokens} prompt tokens chunked, "
               f"{res.evictions} evictions, "
               f"KV {eng.kv_bytes_per_token():.0f} B/token")
+        if args.spec_decode:
+            st = eng.spec_stats()
+            print(f"[serve] speculative: {res.spec_steps} verify steps, "
+                  f"acceptance {st['acceptance_rate']:.2f} "
+                  f"({res.accepted_tokens}/{res.draft_tokens} proposals)")
         if use_cache:
             st = eng.prefix_cache_stats()
             print(f"[serve] prefix cache: hit rate {st['hit_rate']:.2f} "
@@ -125,13 +178,15 @@ def main(argv=None):
                         kv_bits=args.kv_bits)
     t0 = time.time()
     if args.mode == "all":
-        study = eng.cot_study(prompts, max_new=args.max_new)
+        study = eng.cot_study(prompts, max_new=args.max_new,
+                              sampler=args.sampler, seed=args.seed)
         for mode, r in study.items():
             print(f"[serve] mode={mode:11s} mean_len={r['mean_len']:.1f} "
                   f"repetition_rate={r['repetition_rate']:.2f}")
             print(f"        sample: {r['generations'][0][:16]}")
     else:
-        res = eng.generate(prompts, max_new=args.max_new, mode=args.mode)
+        res = eng.generate(prompts, max_new=args.max_new, mode=args.mode,
+                           sampler=args.sampler, seed=args.seed)
         for i, toks in enumerate(res.tokens):
             print(f"[serve] req {i}: {len(toks)} tokens: {toks[:16]}")
     print(f"[serve] {args.requests} requests in {time.time() - t0:.1f}s")

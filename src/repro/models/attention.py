@@ -417,6 +417,35 @@ def attn_prefill_chunk_paged(p, x, cfg, pool: dict, page_table: jax.Array,
     return out, pool
 
 
+def attn_verify_paged(p, x, cfg, pool: dict, page_table: jax.Array,
+                      q_start: jax.Array, n_new: jax.Array, *,
+                      qcfg: Optional[QuantConfig] = None,
+                      impl=None, paged_impl: str = "xla"):
+    """Speculative-verify attention step: score a k+1-token draft window
+    in one pass against the paged pool, *without writing it*.
+
+    Unlike `attn_prefill_chunk_paged` the window K/V never goes through
+    the quantize-on-write path here — the raw projections are spliced
+    over the gathered past keys inside the read
+    (`paged_verify_attention`), so a fully rejected draft leaves the pool
+    untouched and the engine commits only the accepted prefix afterwards
+    (`kv_pool.write_chunk`, or `kv_pool.truncate` when a window was
+    optimistically written). C = k+1 is not page-aligned. Returns
+    (out (B, C, d), (k, v)) — the raw window projections the commit
+    needs."""
+    from repro.kernels import paged_prefill
+    b, c = x.shape[0], x.shape[1]
+    positions = q_start[:, None] + jnp.arange(c)[None, :]
+    q, k, v = _qkv(p, x, cfg, positions, qcfg, impl, None, "")
+    ks, vs = pool.get("k_s"), pool.get("v_s")
+    out = paged_prefill.paged_verify_attention(
+        q, pool["k"], pool["v"], ks, vs, page_table, q_start, n_new, k, v,
+        interpret=paged_impl == "pallas_interpret")
+    out = out.reshape(b, c, -1).astype(x.dtype)
+    out = qlinear.apply(p["wo"], out, qcfg, impl)
+    return out, (k, v)
+
+
 def cross_decode(p, x, cfg, cache: dict, *, qcfg=None, impl=None):
     """Cross-attn at decode: context K/V precomputed at prefill."""
     nq, hd = cfg.n_heads, cfg.hd

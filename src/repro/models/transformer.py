@@ -570,6 +570,53 @@ def prefill_chunk_paged(params, pools, page_table, window_rows, tokens,
     return logits, new_pools
 
 
+def verify_step_paged(params, pools, page_table, tokens, q_start, n_new,
+                      cfg, *, qcfg=None, impl=None, paged_impl: str = "xla",
+                      dtype=jnp.bfloat16):
+    """One speculative-verify step: score all C = k+1 positions of each
+    sequence's draft window in a single forward (multi-query decode with
+    causal masking over the window), *read-only* on the pools.
+
+    tokens: (B, C) int32 — column 0 is the slot's last sampled-but-unwritten
+    token, columns 1..n_new-1 are drafter proposals, the rest padding;
+    q_start: (B,) tokens already committed to cache; n_new: (B,) window
+    tokens (1 = plain decode lane with no draft, 0 = idle).
+
+    The window is scored against the pages plus its own raw in-flight K/V
+    (spliced inside the attention read — a rejected draft never touches
+    the pool, so there is nothing to roll back), and the raw window
+    projections are returned for the engine's commit: the accepted prefix
+    goes through the fused quantize-on-write path (`kv_pool.write_chunk`,
+    window pages sized by `kv_pool.verify_window_pages` — C unaligned,
+    unlike the prefill chunk). Returns (logits (B, C, V) f32 at *every*
+    window position, kv_win = {block: (k, v) (G, B, C, nkv, hd)})."""
+    x = params["embed"]["w"].astype(dtype)[tokens]            # (B, C, d)
+
+    def body(x, scanned):
+        gp, gpool = scanned
+        kvs = {}
+        for i, btype in enumerate(cfg.pattern):
+            p = gp[str(i)]
+            h = rms_norm(x, p["ln1"]["g"], cfg.norm_eps)
+            a, kv = attn.attn_verify_paged(
+                p["attn"], h, cfg, gpool[str(i)], page_table,
+                q_start, n_new, qcfg=qcfg, impl=impl, paged_impl=paged_impl)
+            x = x + a
+            h = rms_norm(x, p["ln2"]["g"], cfg.norm_eps)
+            if btype == "moe":
+                m, _ = moe_mod.moe_ffn(p["moe"], h, cfg, qcfg, impl)
+                x = x + m
+            else:
+                x = x + mlp(p["mlp"], h, cfg.act, qcfg, impl)
+            kvs[str(i)] = kv
+        return x, kvs
+
+    x, kv_win = jax.lax.scan(body, x, (params["blocks"], pools))
+    x = rms_norm(x, params["final_norm"]["g"], cfg.norm_eps)
+    logits = _lm_logits(params, x, cfg)
+    return logits, kv_win
+
+
 def init_caches(params, cfg, batch: int, max_len: int, kv_bits: int = 16):
     """Zero caches with the right per-group stacked structure."""
     caches = {}

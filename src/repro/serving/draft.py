@@ -1,0 +1,74 @@
+"""Prompt-lookup (n-gram) drafting for self-speculative decoding.
+
+No draft model: the drafter proposes the continuation of the most recent
+earlier occurrence of the context's trailing n-gram (Saxena-style prompt
+lookup). That targets exactly the failure-turned-feature this repo's CoT
+study measures (cot.detect_repetition, Figure 4): low-bit reasoning traces
+loop, and a looping greedy decode is perfectly predictable from its own
+history — every draft token verifies. On non-repetitive output the drafter
+finds no match and proposes nothing, so the engine falls back to vanilla
+decode steps (see ContinuousBatchingEngine's acceptance-rate cooldown).
+
+Host-side and stateless: `propose` is O((ngram_max - ngram_min) * len)
+per call via `bytes.rfind` over the int64-encoded context — single-digit
+microseconds at serving context lengths (the engine calls it for every
+decoding lane on every non-cooldown step, so per-call constant factors
+are a direct decode-throughput tax; a numpy sliding-window compare
+measures ~10x slower purely on per-op dispatch overhead).
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import numpy as np
+
+
+class NgramDrafter:
+    """Propose up to `k` draft tokens by longest-suffix n-gram lookup.
+
+    Tries suffix n-grams from `ngram_max` down to `ngram_min`; the first
+    n with an earlier occurrence wins and the match *closest to the end*
+    (most recent, most likely still in-distribution) sets a lag L; drafts
+    extrapolate the recurrence x[t] = x[t - L], so a tight loop of period
+    L < k still yields k drafts (the copy source rolls into the drafts
+    themselves). ngram_min >= 2 keeps spurious single-token matches from
+    flooding low-acceptance workloads with doomed drafts.
+    """
+
+    def __init__(self, k: int, ngram_max: int = 3, ngram_min: int = 2):
+        assert k >= 1 and 1 <= ngram_min <= ngram_max
+        self.k = k
+        self.ngram_max = ngram_max
+        self.ngram_min = ngram_min
+
+    def propose(self, context: Sequence[int], k: int = None) -> List[int]:
+        """Draft up to min(k, self.k) tokens continuing `context` (prompt +
+        tokens emitted so far, most recent last). Returns [] when no
+        trailing n-gram recurs earlier in the context."""
+        k = self.k if k is None else min(k, self.k)
+        arr = np.asarray(context, dtype=np.int64)
+        n_ctx = arr.shape[0]
+        if k < 1 or n_ctx < self.ngram_min + 1:
+            return []
+        # search the byte encoding: rfind is a C substring scan straight to
+        # the most recent occurrence; a hit at a non-multiple-of-8 offset
+        # is a coincidental byte alignment, not a token match — step the
+        # search window back past it (int64 encoding keeps this rare)
+        itm = arr.itemsize
+        buf = arr[:n_ctx - 1].tobytes()
+        for n in range(min(self.ngram_max, n_ctx - 1), self.ngram_min - 1,
+                       -1):
+            pat = arr[n_ctx - n:].tobytes()
+            pos = buf.rfind(pat)
+            while pos > 0 and pos % itm:
+                pos = buf.rfind(pat, 0, pos + len(pat) - 1)
+            if pos < 0 or pos % itm:
+                continue
+            lag = (n_ctx - n) - pos // itm
+            drafts: List[int] = []
+            for i in range(k):
+                j = n_ctx + i - lag
+                drafts.append(int(arr[j]) if j < n_ctx
+                              else drafts[j - n_ctx])
+            return drafts
+        return []

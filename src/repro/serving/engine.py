@@ -41,7 +41,9 @@ import numpy as np
 
 from repro.models import transformer
 from repro.serving import cot, sampling
-from repro.serving.kv_pool import SCRATCH_PAGE, chunk_window_pages
+from repro.serving.draft import NgramDrafter
+from repro.serving.kv_pool import (SCRATCH_PAGE, chunk_window_pages,
+                                   verify_window_pages)
 from repro.serving.scheduler import PagedScheduler, Request
 
 
@@ -163,6 +165,9 @@ class ContinuousResult:
     mixed_steps: int = 0             # chunked prefill+decode steps
     prefill_tokens: int = 0          # prompt tokens written via chunks
     prefix_hit_tokens: int = 0       # prompt tokens served from the cache
+    spec_steps: int = 0              # speculative verify steps
+    draft_tokens: int = 0            # drafter proposals scored
+    accepted_tokens: int = 0         # proposals accepted (excl. bonus)
 
 
 class ContinuousBatchingEngine:
@@ -179,6 +184,24 @@ class ContinuousBatchingEngine:
     uncached tail is chunk-prefilled; finished requests promote their
     prompt pages. Cache hits change page-table *contents*, never step
     shapes, so compile_counts() stays at the two-program steady state.
+
+    spec_decode=k (chunked mode only) turns on draft-free self-speculative
+    decoding: in pure-decode steps an n-gram prompt-lookup drafter
+    (serving/draft.py) proposes up to k tokens per lane and one jitted
+    verify program (fixed k+1 window — at most one extra compilation)
+    scores them all, committing accepted prefixes through the fused
+    quantize-on-write path and rolling back rejected suffixes page-exactly
+    (kv_pool.truncate + scheduler.truncate_to). With sampler="greedy" and
+    bf16 pools the emitted tokens are bit-exact with vanilla greedy decode
+    (int8 pools score the draft window's K/V pre-quantization, a deviation
+    within quantization noise); sampler="temperature" accepts via
+    rejection sampling (sampling.speculative_accept), preserving the
+    target distribution. A cost-model gate bounds the overhead on
+    n-gram-free workloads: a verify step only runs when the drafted total
+    times a running acceptance estimate clears spec_gate extra tokens per
+    lane (the measured verify/decode cost ratio), and consecutive thin
+    drafting backs the host-side lookup off exponentially (doubling
+    cooldown capped at spec_cooldown decode steps).
     """
 
     def __init__(self, params, cfg, *, qcfg=None, impl=None, kv_bits=16,
@@ -187,7 +210,11 @@ class ContinuousBatchingEngine:
                  eos_id: Optional[int] = None, dtype=jnp.bfloat16,
                  paged_impl: str = "xla", prefill_mode: str = "chunked",
                  chunk_pages: int = 2, token_budget: Optional[int] = None,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False, spec_decode: int = 0,
+                 sampler: str = "greedy", temperature: float = 0.8,
+                 top_p: float = 1.0, seed: int = 0,
+                 spec_ngram_max: int = 3, spec_ngram_min: int = 2,
+                 spec_gate: float = 1.5, spec_cooldown: int = 64):
         assert transformer.supports_paged(cfg), (
             f"paged decode needs full attention over token inputs: "
             f"pattern={cfg.pattern} (supported {transformer.PAGED_PATTERNS}),"
@@ -222,6 +249,28 @@ class ContinuousBatchingEngine:
         # prefill chunk costs chunk_tokens; default = one chunk + all lanes
         self.token_budget = (token_budget if token_budget is not None
                              else self.chunk_tokens + max_batch)
+        assert sampler in ("greedy", "temperature"), sampler
+        assert spec_decode >= 0, spec_decode
+        assert not (spec_decode and prefill_mode == "legacy"), \
+            "speculative decoding needs chunked prefill (the verify step " \
+            "reuses the chunk-attention machinery)"
+        self.sampler = sampler
+        self.temperature = temperature
+        self.top_p = top_p
+        self._key = jax.random.PRNGKey(seed)
+        self.spec_k = spec_decode
+        self.spec_tokens = spec_decode + 1          # window width k+1
+        self.spec_window_pages = verify_window_pages(self.spec_tokens,
+                                                     page_size)
+        self._drafter = NgramDrafter(max(1, spec_decode),
+                                     ngram_max=spec_ngram_max,
+                                     ngram_min=spec_ngram_min)
+        self.spec_gate = spec_gate
+        self.spec_cooldown = spec_cooldown
+        self._spec_off = 0                          # cooldown steps left
+        self._gate_cool = 2                         # doubles per miss streak
+        self._gate_misses = 0                       # consecutive thin-draft steps
+        self._acc_est = 0.5                         # per-proposal EMA, optimistic
         self._last_tok = np.zeros(max_batch, np.int32)
         self._requests: Dict[int, Request] = {}
         self._policies: Dict[int, cot.StopPolicy] = {}
@@ -230,18 +279,55 @@ class ContinuousBatchingEngine:
         self.decode_tokens = 0
         self.mixed_steps = 0
         self.prefill_tokens = 0
+        self.spec_steps = 0
+        self.draft_tokens = 0
+        self.accepted_tokens = 0
 
         self._prefill = jax.jit(
             partial(transformer.prefill, cfg=cfg, qcfg=qcfg, impl=impl,
                     kv_bits=16, dtype=dtype),
             static_argnames=("max_len",))
+        # The pool buffers are donated into every steady-state program:
+        # each step rewrites a page or two of multi-MB pools, and without
+        # input-output aliasing XLA copies every pool leaf per step. All
+        # call sites immediately rebind self.pools to the returned pools.
         self._decode = jax.jit(
             partial(transformer.decode_step_paged, cfg=cfg, qcfg=qcfg,
-                    impl=impl, paged_impl=paged_impl, dtype=dtype))
+                    impl=impl, paged_impl=paged_impl, dtype=dtype),
+            donate_argnums=(1,))
         self._mixed = jax.jit(
             partial(transformer.prefill_chunk_paged, cfg=cfg, qcfg=qcfg,
-                    impl=impl, paged_impl=paged_impl, dtype=dtype))
+                    impl=impl, paged_impl=paged_impl, dtype=dtype),
+            donate_argnums=(1,))
         self._sample = jax.jit(lambda lg: jnp.argmax(lg, -1).astype(jnp.int32))
+        self._sample_t = jax.jit(partial(sampling.top_p, p=top_p,
+                                         temp=temperature))
+
+        def verify_fn(params, pools, page_table, window_rows, tokens,
+                      q_start, n_new, key):
+            # score the whole draft window read-only (the window's raw K/V
+            # is spliced into the attention read, so a rejected suffix
+            # never touches the pool), accept a prefix, then commit only
+            # the accepted tokens through the fused quantize-on-write path
+            from repro.serving import kv_pool
+            logits, kv_win = transformer.verify_step_paged(
+                params, pools, page_table, tokens, q_start, n_new, cfg,
+                qcfg=qcfg, impl=impl, paged_impl=paged_impl, dtype=dtype)
+            emit, acc = sampling.speculative_accept(
+                logits.astype(jnp.float32), tokens, n_new, key,
+                mode=self.sampler, temp=temperature, top_p=top_p)
+            n_keep = jnp.where(n_new > 0, acc + 1, 0)
+            out_pools = {}
+            for i in pools:
+                kw, vw = kv_win[i]
+                out_pools[i] = jax.vmap(
+                    kv_pool.write_chunk,
+                    in_axes=(0, 0, 0, None, None, None))(
+                    pools[i], kw, vw, window_rows, q_start, n_keep)
+            return emit, acc, out_pools
+
+        self._verify = jax.jit(verify_fn, donate_argnums=(1,))
+        self._zero_key = jax.random.PRNGKey(0)
 
         def to_pages(pools, caches, page_rows, lengths):
             from repro.serving import kv_pool
@@ -266,11 +352,24 @@ class ContinuousBatchingEngine:
 
     def compile_counts(self) -> Dict[str, int]:
         """Compilation-cache sizes of the jitted step functions. Chunked
-        steady state is exactly {mixed: 1, decode: 1, prefill: 0}; legacy
-        pays one `prefill` entry per distinct power-of-two page bucket."""
+        steady state is exactly {mixed: 1, decode: 1, prefill: 0,
+        verify: 0}; --spec-decode adds at most one `verify` program
+        (fixed k+1 window shape); legacy pays one `prefill` entry per
+        distinct power-of-two page bucket."""
         return {"prefill": self._prefill._cache_size(),
                 "mixed": self._mixed._cache_size(),
-                "decode": self._decode._cache_size()}
+                "decode": self._decode._cache_size(),
+                "verify": self._verify._cache_size()}
+
+    def spec_stats(self) -> Dict[str, float]:
+        """Cumulative speculative-decoding counters and acceptance rate
+        (accepted drafter proposals / proposals scored; the bonus token
+        every verify step emits is not counted on either side)."""
+        return {"spec_steps": self.spec_steps,
+                "draft_tokens": self.draft_tokens,
+                "accepted_tokens": self.accepted_tokens,
+                "acceptance_rate": (self.accepted_tokens
+                                    / max(1, self.draft_tokens))}
 
     def prefix_cache_stats(self) -> Dict[str, float]:
         """Cumulative prefix-cache counters: prompt tokens through
@@ -330,11 +429,20 @@ class ContinuousBatchingEngine:
         self.pools = self._to_pages(self.pools, caches, jnp.asarray(rows),
                                     lens)
         self.prefill_tokens += n
-        tok = int(np.asarray(self._sample(logits))[0])
+        tok = int(self._sample_tokens(logits)[0])
         req.out.append(tok)
         self._last_tok[slot] = tok
         if self._policies[req.rid].done(req.out):
             self.sched.complete(slot)
+
+    def _sample_tokens(self, logits) -> np.ndarray:
+        """Sample next tokens per lane under the engine's sampler: greedy
+        argmax (keyless, deterministic — the path the CoT study measures)
+        or temperature with nucleus filtering (top_p=1.0 disables it)."""
+        if self.sampler == "greedy":
+            return np.asarray(self._sample(logits))
+        self._key, sub = jax.random.split(self._key)
+        return np.asarray(self._sample_t(logits, sub))
 
     def step(self) -> bool:
         """One engine step. Returns whether any progress was made."""
@@ -361,7 +469,7 @@ class ContinuousBatchingEngine:
             self.params, self.pools, jnp.asarray(sched.page_table),
             jnp.asarray(self._last_tok), jnp.asarray(sched.lengths))
         self.steps_run += 1
-        nxt = np.asarray(self._sample(logits))
+        nxt = self._sample_tokens(logits)
         for slot in list(sched.active):
             req = sched.active[slot]
             sched.lengths[slot] += 1
@@ -420,6 +528,12 @@ class ContinuousBatchingEngine:
         advancing, decoding = self._plan_chunked()
 
         if not advancing:
+            # pure-decode steady state: speculate when enabled and warm
+            if self.spec_k and decoding:
+                if self._spec_off > 0:
+                    self._spec_off -= 1
+                elif self._try_spec_step(decoding):
+                    return True
             # steady-state decode: same compiled program as legacy decode
             logits, self.pools = self._decode(
                 self.params, self.pools, jnp.asarray(sched.page_table),
@@ -485,14 +599,167 @@ class ContinuousBatchingEngine:
                 sched.complete(slot)
         return True
 
+    # -- speculative decoding -------------------------------------------------
+
+    def _try_spec_step(self, decoding: List[int]) -> bool:
+        """One speculative verify step over the pure-decode lanes: draft up
+        to k tokens per lane by prompt lookup, score the k+1-token windows
+        read-only in the single jitted verify program, and commit each
+        lane's accepted prefix + bonus token through the fused
+        quantize-on-write path (rejected suffixes were never written).
+        Returns False (caller falls through to the vanilla decode step)
+        when the cost-model gate says drafting is too thin to pay for the
+        verify — expected extra tokens (drafted total x the running
+        acceptance estimate) below spec_gate per lane — so adversarial,
+        n-gram-free workloads degrade to plain decode plus a cheap,
+        exponentially backed-off host-side lookup.
+
+        Lanes with no usable draft still ride the verify step with
+        n_new = 1, which is bit-exact with a vanilla decode write
+        (write_chunk with one token == write_token)."""
+        sched = self.sched
+        page = self.page_size
+        cap = self.max_pages_per_seq * page
+        cs, wcv = self.spec_tokens, self.spec_window_pages
+
+        drafts: Dict[int, List[int]] = {}
+        for slot in decoding:
+            req = sched.active[slot]
+            length = int(sched.lengths[slot])
+            budget_left = self._policies[req.rid].budget - len(req.out)
+            # the pending token costs one cache slot and one budget slot;
+            # clamp so accept-all can neither overrun the sequence cap nor
+            # outlive the stop policy's budget
+            room = min(self.spec_k, budget_left - 1, cap - length - 1)
+            drafts[slot] = (self._drafter.propose(
+                list(req.prompt) + list(req.out), k=room)
+                if room >= 1 else [])
+        total = sum(len(d) for d in drafts.values())
+        if total * self._acc_est < self.spec_gate * len(decoding):
+            # expected extra tokens don't cover the verify's cost premium
+            # over a plain decode step; after a few consecutive thin steps
+            # stop even *drafting* for a while (the host-side lookup is
+            # not free at decode-step latencies), doubling the pause up to
+            # spec_cooldown so a persistently n-gram-free workload pays an
+            # ever-smaller probing tax
+            self._gate_misses += 1
+            if self._gate_misses >= 2:
+                self._spec_off = self._gate_cool
+                self._gate_cool = min(self._gate_cool * 2,
+                                      self.spec_cooldown)
+                self._gate_misses = 0
+            return False
+        self._gate_misses = 0
+
+        # secure pages for every lane's full window (pending + drafts);
+        # growth can preempt lanes (including a drafting lane itself) —
+        # replan until a pass allocates without evicting
+        try:
+            while True:
+                evicted = False
+                for slot in decoding:
+                    if slot not in sched.active:
+                        continue
+                    target = int(sched.lengths[slot]) + 1 + len(drafts[slot])
+                    if sched.grow_to(slot, target):
+                        evicted = True
+                if not evicted:
+                    break
+        except RuntimeError:
+            # pool too tight for even one lane's window — surplus pages
+            # already granted stay with their lanes (reused by later
+            # growth, freed on completion); vanilla decode still fits
+            # because _plan_chunked grew every lane for one token
+            return False
+        decoding = [s for s in decoding if s in sched.active]
+        if not decoding:
+            return False
+
+        b = sched.n_slots
+        toks = np.zeros((b, cs), np.int32)
+        q_start = np.zeros(b, np.int32)
+        n_new = np.zeros(b, np.int32)
+        windows = np.full((b, wcv), SCRATCH_PAGE, np.int32)
+        for slot in decoding:
+            d = drafts[slot]
+            start = int(sched.lengths[slot])
+            toks[slot, 0] = self._last_tok[slot]
+            toks[slot, 1:1 + len(d)] = d
+            q_start[slot] = start
+            n_new[slot] = 1 + len(d)
+            pidx0 = start // page
+            row = sched.page_table[slot]
+            take = min(wcv, row.shape[0] - pidx0)
+            windows[slot, :take] = row[pidx0:pidx0 + take]
+
+        if self.sampler == "greedy":
+            key = self._zero_key
+        else:
+            self._key, key = jax.random.split(self._key)
+        emit, acc, self.pools = self._verify(
+            self.params, self.pools, jnp.asarray(sched.page_table),
+            jnp.asarray(windows), jnp.asarray(toks), jnp.asarray(q_start),
+            jnp.asarray(n_new), key)
+        emit, acc = np.asarray(emit), np.asarray(acc)
+        self.spec_steps += 1
+
+        step_scored = step_accepted = 0
+        for slot in decoding:
+            req = sched.active[slot]
+            a = int(acc[slot])
+            self.draft_tokens += int(n_new[slot]) - 1
+            self.accepted_tokens += a
+            step_scored += int(n_new[slot]) - 1
+            step_accepted += a
+            new_len = int(q_start[slot]) + 1 + a
+            sched.lengths[slot] = new_len
+            sched.truncate_to(slot, new_len)
+            done = False
+            for j in range(a + 1):
+                tok = int(emit[slot, j])
+                req.out.append(tok)
+                self.decode_tokens += 1
+                self._last_tok[slot] = tok
+                if self._policies[req.rid].done(req.out):
+                    done = True
+                    break
+            if done:
+                sched.complete(slot)
+        # per-proposal acceptance EMA feeding the gate; the 0.2 floor
+        # keeps a cold streak from pinning the gate shut forever (the
+        # doubling cooldown, not the EMA, owns long-horizon backoff)
+        rate = step_accepted / max(1, step_scored)
+        self._acc_est = min(1.0, max(0.2, 0.8 * self._acc_est + 0.2 * rate))
+        if rate >= 0.25:
+            # a verify that actually paid off restarts the cooldown ladder
+            # from the bottom
+            self._gate_cool = 2
+        else:
+            # one that didn't was a false positive from a coincidental
+            # n-gram hit — climb the ladder immediately rather than waiting
+            # for thin-draft misses, so an adversarial workload's wasted
+            # verifies (the costliest false-positive mode) back off just
+            # as fast as its wasted drafting
+            self._spec_off = self._gate_cool
+            self._gate_cool = min(self._gate_cool * 2, self.spec_cooldown)
+        return True
+
     def run(self, prompts: Sequence[Sequence[int]], *,
             mode: str = "slow_think", max_new: int = 32,
             max_steps: int = 100_000) -> ContinuousResult:
         rids = [self.submit(p, mode=mode, max_new=max_new) for p in prompts]
+        # fresh speculation heuristics per batch run: leftover cooldown or
+        # window state from a previous batch would make identical runs
+        # gate differently (submit()/step() callers keep continuous state)
+        self._spec_off = self._gate_misses = 0
+        self._gate_cool = 2
+        self._acc_est = 0.5
         steps0, tokens0 = self.steps_run, self.decode_tokens
         evict0 = self.sched.n_evictions
         mixed0, pf0 = self.mixed_steps, self.prefill_tokens
         hit0 = self.sched.prefix_hit_tokens
+        spec0, dr0, acc0 = (self.spec_steps, self.draft_tokens,
+                            self.accepted_tokens)
         steps = 0
         while not self.sched.idle:
             progressed = self.step()
@@ -511,4 +778,7 @@ class ContinuousBatchingEngine:
             evictions=self.sched.n_evictions - evict0,
             mixed_steps=self.mixed_steps - mixed0,
             prefill_tokens=self.prefill_tokens - pf0,
-            prefix_hit_tokens=self.sched.prefix_hit_tokens - hit0)
+            prefix_hit_tokens=self.sched.prefix_hit_tokens - hit0,
+            spec_steps=self.spec_steps - spec0,
+            draft_tokens=self.draft_tokens - dr0,
+            accepted_tokens=self.accepted_tokens - acc0)

@@ -212,7 +212,7 @@ def chunk_window_pages(chunk_tokens: int, page_size: int) -> int:
 
 def write_chunk(pool: dict, k: jax.Array, v: jax.Array,
                 window_rows: jax.Array, start: jax.Array,
-                n_new: jax.Array) -> dict:
+                n_new: jax.Array, src: Optional[dict] = None) -> dict:
     """Write up to C new tokens per sequence at positions start..start+n_new-1,
     quantizing directly into pages (no dense intermediate cache).
 
@@ -230,6 +230,11 @@ def write_chunk(pool: dict, k: jax.Array, v: jax.Array,
     the same bounded re-rounding `write_token` pays, amortized over the
     whole chunk. Unwritten window positions are zeroed so they cannot
     inflate the page scale.
+
+    src: optional pre-gathered window leaves {leaf: (B, Wc, ...)} to merge
+    against instead of gathering pool[leaf][window_rows] — `truncate` uses
+    this to rebuild the window from its pre-speculation snapshot without a
+    restore scatter + re-gather round trip.
     """
     page = pool["k"].shape[1]
     b, c, nkv, hd = k.shape
@@ -247,9 +252,12 @@ def write_chunk(pool: dict, k: jax.Array, v: jax.Array,
     quantized = pool_is_quantized(pool)
     pool = dict(pool)
     for name, s_name, tok in (("k", "k_s", k), ("v", "v_s", v)):
-        pages = pool[name][window_rows].astype(jnp.float32)   # (B,Wc,page,..)
+        gathered = (src[name] if src is not None
+                    else pool[name][window_rows])
+        pages = gathered.astype(jnp.float32)                  # (B,Wc,page,..)
         if quantized:
-            sc = pool[s_name][window_rows]                    # (B, Wc, nkv)
+            sc = (src[s_name] if src is not None
+                  else pool[s_name][window_rows])             # (B, Wc, nkv)
             pages = pages * sc[:, :, None, :, None]
         f = pages.reshape(b, wc * page, nkv, hd)
         f = jnp.where(keep_old, f, 0.0)
@@ -266,6 +274,35 @@ def write_chunk(pool: dict, k: jax.Array, v: jax.Array,
             pool[name] = pool[name].at[ids].set(
                 f.reshape(-1, page, nkv, hd).astype(pool[name].dtype))
     return pool
+
+
+# -- speculative verify: page-exact rollback ---------------------------------
+
+def verify_window_pages(chunk_tokens: int, page_size: int) -> int:
+    """Pages a C-token verify window can span at arbitrary start. Unlike
+    `chunk_window_pages` the window length (k+1 draft tokens) need not be
+    page-aligned, so this is ceil(C/page) full-or-partial pages plus one
+    boundary page — sized to satisfy write_chunk's Wc*page >= C + page."""
+    return -(-chunk_tokens // page_size) + 1
+
+
+def truncate(pool: dict, window_rows: jax.Array, snap: dict, k: jax.Array,
+             v: jax.Array, start: jax.Array, n_keep: jax.Array) -> dict:
+    """Roll a speculative window back page-exactly, keeping only the
+    accepted prefix.
+
+    `snap` holds the window pages as they were *before* the verify write
+    (one leaf per pool leaf, shaped (B, Wc, ...) — a `pool[leaf][window_rows]`
+    gather). Re-running `write_chunk` against the snapshot (src=snap, so
+    the post-verify page contents never enter the merge) with
+    n_keep <= n_new makes the final pool bit-identical to having written
+    only the accepted tokens in the first place: rewriting on top of the
+    post-verify pages instead would pay an extra dequant-requant round
+    trip on the boundary page and drift from the vanilla chain.
+
+    n_keep: (B,) tokens to commit (accepted + bonus; 0 for idle lanes).
+    """
+    return write_chunk(pool, k, v, window_rows, start, n_keep, src=snap)
 
 
 # -- decode: one token per sequence ------------------------------------------

@@ -228,6 +228,24 @@ class PagedScheduler:
             self.page_table[slot, pidx] = page[0]
         return evicted
 
+    def truncate_to(self, slot: int, n_tokens: int) -> None:
+        """Shrink `slot`'s page list to exactly cover `n_tokens` cache
+        positions, returning surplus pages grown for a speculative window
+        whose tail was rejected. Surplus pages release through the same
+        `_return_pages` choke point as preemption, so prefix-cache parked
+        pages and refcounts stay consistent; shared prefix-hit pages are
+        never surplus (the kept prefix always spans at least the prompt's
+        cached pages — the engine only truncates back to a length >= the
+        pre-speculation committed length)."""
+        need = -(-n_tokens // self.page_size)
+        pages = self.seq_pages[slot]
+        if len(pages) <= need:
+            return
+        surplus = pages[need:]
+        self.seq_pages[slot] = pages[:need]
+        self.page_table[slot, need:len(pages)] = SCRATCH_PAGE
+        self._return_pages(surplus)
+
     def ensure_decode_capacity(self) -> List[Request]:
         """Each active decode slot writes position lengths[slot] this step;
         grow its page list across page boundaries, preempting if the pool

@@ -209,7 +209,8 @@ def test_chunked_engine_matches_legacy_fp16():
     assert got.tokens == want.tokens
     assert got.prefill_tokens == sum(got.prompt_lens)
     assert got.mixed_steps > 0
-    assert ch.compile_counts() == {"prefill": 0, "mixed": 1, "decode": 1}
+    assert ch.compile_counts() == {"prefill": 0, "mixed": 1, "decode": 1,
+                                   "verify": 0}
 
 
 def test_chunked_engine_first_token_int8():

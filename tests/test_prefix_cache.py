@@ -215,7 +215,8 @@ def test_engine_cache_hits_bitexact(kv_bits):
     assert warm.tokens == want.tokens         # warm pass: hits, bit-exact
     assert cold.prefix_hit_tokens == 0
     assert warm.prefix_hit_tokens >= 3 * 4 * 8    # every shared page hit
-    assert eng.compile_counts() == {"prefill": 0, "mixed": 1, "decode": 1}
+    assert eng.compile_counts() == {"prefill": 0, "mixed": 1, "decode": 1,
+                                    "verify": 0}
     stats = eng.prefix_cache_stats()
     assert stats["hit_rate"] > 0.4 and stats["cached_pages"] > 0
 

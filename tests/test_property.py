@@ -166,6 +166,101 @@ def test_page_allocator_refcount_invariants(ops, n_pages):
     assert a.n_free == n_pages - 1 and a.n_live == 0 and a.n_parked == 0
 
 
+# -- scheduler under speculative decoding ----------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 3), st.integers(0, 7),
+                          st.integers(0, 7)),
+                min_size=1, max_size=80),
+       st.integers(6, 14), st.integers(2, 3))
+def test_scheduler_spec_interleaving_allocator_invariants(ops, n_pages,
+                                                         n_slots):
+    """Random interleavings of chunked prefill, speculative window growth,
+    accept/reject truncation, completion, and the preemption + prefix-cache
+    traffic they trigger on a deliberately tiny pool: after every op each
+    page is in exactly one of {free, live, parked} —
+    n_free + n_live + n_parked == n_pages - 1 — and draining the scheduler
+    returns the pool whole."""
+    from repro.serving.kv_pool import SCRATCH_PAGE
+    from repro.serving.scheduler import PagedScheduler, Request
+
+    page = 4
+    chunk = 2 * page
+    spec_k = 6
+    sched = PagedScheduler(n_slots=n_slots, n_pages=n_pages, page_size=page,
+                           max_pages_per_seq=n_pages - 1, prefix_cache=True)
+    rid = 0
+
+    def check():
+        a = sched.alloc
+        assert a.n_free + a.n_live + a.n_parked == n_pages - 1
+        # any page a slot maps must be live (never free/parked under a slot)
+        for s in sched.active:
+            for p in sched.seq_pages[s]:
+                assert a.refcount(p) >= 1 and p != SCRATCH_PAGE
+
+    for op, x, y in ops:
+        if op == 0:                               # submit + admit
+            # prompts drawn from 4 templates so admissions hit the cache
+            prompt = [x % 4] * (page * (x % 3 + 1) + y % page + 1)
+            sched.submit(Request(rid=rid, prompt=prompt, mode="slow_think",
+                                 budget=8))
+            rid += 1
+            sched.admit(max_prefill_pages=2)
+        elif op == 1 and sched.active:            # one prefill chunk
+            slots = sched.prefilling_slots()
+            if slots:
+                s = slots[x % len(slots)]
+                goal = min(len(sched.active[s].prompt),
+                           int(sched.prefill_progress[s]) + chunk)
+                try:
+                    sched.grow_to(s, goal)
+                except RuntimeError:
+                    check()
+                    continue
+                if s in sched.active:
+                    sched.prefill_progress[s] = goal
+                    sched.lengths[s] = goal
+        elif op == 2 and sched.active:            # speculative step
+            slots = sched.decoding_slots()
+            if slots:
+                s = slots[x % len(slots)]
+                drafted = y % (spec_k + 1)
+                start = int(sched.lengths[s])
+                try:
+                    sched.grow_to(s, start + 1 + drafted)
+                except RuntimeError:
+                    check()
+                    continue
+                if s in sched.active:             # may have self-preempted
+                    accepted = min(x % (spec_k + 1), drafted)
+                    sched.lengths[s] = start + 1 + accepted
+                    sched.truncate_to(s, start + 1 + accepted)
+        elif op == 3 and sched.active:            # finish a request
+            slots = sched.decoding_slots()
+            if slots:
+                sched.complete(slots[x % len(slots)])
+        check()
+
+    # drain: finish any outstanding prefill (the engine never completes a
+    # mid-prefill slot), then complete — growth may preempt other slots,
+    # which simply requeue with their pages released
+    while sched.active:
+        s = min(sched.active)
+        full = len(sched.active[s].prompt)
+        if sched.prefill_progress[s] < full:
+            sched.grow_to(s, full)
+            if s not in sched.active:
+                continue
+            sched.prefill_progress[s] = full
+            sched.lengths[s] = full
+        sched.complete(s)
+        check()
+    a = sched.alloc
+    assert a.n_live == 0
+    assert a.n_free + a.n_parked == n_pages - 1
+
+
 # -- repetition detector -------------------------------------------------------------
 
 @_settings
