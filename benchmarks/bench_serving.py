@@ -1,6 +1,6 @@
 """Continuous-batching serving benchmark: decode tokens/sec, batched
 prefill tokens/sec, TTFT, compile counts, and KV bytes/token for the fp16
-vs int8 paged cache on the pangu_1b config.
+vs int8 vs packed-int4 paged cache on the pangu_1b config.
 
     PYTHONPATH=src python benchmarks/bench_serving.py [--full] [--smoke]
 
@@ -8,6 +8,12 @@ Reports (and asserts, so the bench doubles as an acceptance gate):
   * int8 paged cache uses <= 55% of the fp16 pool's KV bytes/token
     (per-page per-head scales amortize the scale overhead to 4/page_size
     bytes per head; a per-token-scale layout would sit at ~56% for hd=32);
+  * packed-int4 pages (two nibbles per byte along head_dim) use <= 30% of
+    the fp16 pool's KV bytes/token, and the int4 engine is functional
+    end-to-end: chunked prefill + prefix caching + speculative decode on
+    packed pages emit valid tokens on at most 3 steady-state programs,
+    warm prefix hits replay bit-identical packed codes + scales, and
+    speculative truncate is bit-identical to a direct write;
   * chunked batched prefill (the mixed-step path, fused quantize-on-write)
     delivers >= 1.5x the prefill tokens/sec of the legacy per-admission
     path at batch 8, without regressing steady-state decode-step latency
@@ -52,9 +58,13 @@ re-traces the kernel grid in Python and measures the interpreter, not the
 serving engine. On a real Atlas-A2-class part the streaming kernels replace
 the gathers; their correctness is what's gated here.
 
---smoke runs the gates (bytes ratio, prefill speedup, decode latency,
-compile counts, kernel parity) on CI-sized shapes and skips the batch
-sweep; scripts/ci.sh runs it on every push.
+--smoke runs the gates (bytes ratios, prefill speedup, decode latency,
+compile counts, kernel parity, int4 functional) on CI-sized shapes and
+skips the batch sweep; scripts/ci.sh runs it on every push. --kv-bits
+selects the pool dtype the engine-level legs (kernel parity, chunked vs
+legacy prefill, prefix caching) run under — the CI int4 leg passes
+`--kv-bits 4` so the whole serving path is exercised on packed pages and
+its metrics land in a separate artifact.
 """
 from __future__ import annotations
 
@@ -64,8 +74,10 @@ import json
 import os
 import sys
 import time
+from types import SimpleNamespace
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 if importlib.util.find_spec("repro") is None:       # script run w/o PYTHONPATH
@@ -75,6 +87,7 @@ from repro.configs import get_arch, reduced            # noqa: E402
 from repro.data import DataConfig, make_prompts        # noqa: E402
 from repro.models import transformer                   # noqa: E402
 from repro.serving import ContinuousBatchingEngine     # noqa: E402
+from repro.serving import kv_pool                      # noqa: E402
 
 PAGE = 16
 CHUNK_PAGES = 2
@@ -239,6 +252,10 @@ def main(argv=None):
     ap.add_argument("--batches", type=int, nargs="*", default=None)
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write all reported metrics to PATH as JSON")
+    ap.add_argument("--kv-bits", type=int, choices=[4, 8, 16], default=8,
+                    help="pool dtype for the engine-level legs (kernel "
+                    "parity, chunked-vs-legacy prefill, prefix caching); "
+                    "the bytes and int4 gates always run")
     args = ap.parse_args(argv)
     prompt_len = args.prompt_len or (48 if args.smoke else 16)
     max_new = args.max_new or (8 if args.smoke else 32)
@@ -254,24 +271,28 @@ def main(argv=None):
                            n_prompts, prompt_len)
     ok = True
 
-    # -- KV bytes/token: fp16 vs int8 pool (geometry, batch-independent) ----
+    # -- KV bytes/token: fp16 vs int8 vs packed-int4 pool (geometry) --------
     bpt = {}
-    for kv_bits in (16, 8):
+    for kv_bits in (16, 8, 4):
         eng = make_engine(params, cfg, kv_bits=kv_bits, max_batch=1,
                           max_seq_len=max_seq_len)
         bpt[kv_bits] = eng.kv_bytes_per_token()
     ratio = bpt[8] / bpt[16]
+    ratio4 = bpt[4] / bpt[16]
     print(f"# KV bytes/token: fp16={bpt[16]:.1f} int8={bpt[8]:.1f} "
-          f"(ratio {ratio:.3f})")
+          f"int4={bpt[4]:.1f} (ratios {ratio:.3f} / {ratio4:.3f})")
     if ratio > 0.55:
         ok = False
         print(f"FAIL: int8 KV bytes/token ratio {ratio:.3f} > 0.55")
+    if ratio4 > 0.30:
+        ok = False
+        print(f"FAIL: int4 KV bytes/token ratio {ratio4:.3f} > 0.30")
 
     # -- pallas kernels (interpret) vs XLA gather: same tokens --------------
     few = prompts[:2]
-    r_xla = make_engine(params, cfg, kv_bits=8, max_batch=2,
+    r_xla = make_engine(params, cfg, kv_bits=args.kv_bits, max_batch=2,
                         max_seq_len=max_seq_len).run(few, max_new=8)
-    r_pal = make_engine(params, cfg, kv_bits=8, max_batch=2,
+    r_pal = make_engine(params, cfg, kv_bits=args.kv_bits, max_batch=2,
                         max_seq_len=max_seq_len,
                         paged_impl="pallas_interpret").run(few, max_new=8)
     kernel_ok = r_xla.tokens == r_pal.tokens
@@ -284,8 +305,8 @@ def main(argv=None):
     b8 = prompts[:8]
     engines = {}
     for mode in ("chunked", "legacy"):
-        engines[mode] = make_engine(params, cfg, kv_bits=8, max_batch=8,
-                                    max_seq_len=max_seq_len,
+        engines[mode] = make_engine(params, cfg, kv_bits=args.kv_bits,
+                                    max_batch=8, max_seq_len=max_seq_len,
                                     prefill_mode=mode)
     stats = {m: best_prefill(engines[m], b8, max_new=max_new)
              for m in engines}
@@ -334,7 +355,7 @@ def main(argv=None):
               for _ in range(8)]
     px_new = max(max_new, 16)                  # enough decode-step samples
     px_seq = PAGE * -(-(len(shared[0]) + px_new + 2) // PAGE)
-    eng_on = make_engine(params, cfg, kv_bits=8, max_batch=8,
+    eng_on = make_engine(params, cfg, kv_bits=args.kv_bits, max_batch=8,
                          max_seq_len=px_seq, prefix_cache=True)
     eng_on.run(prompts[:1], max_new=2)         # jit warm, cache stays cold
     cold = prefill_metrics(eng_on, shared, max_new=px_new)
@@ -346,7 +367,7 @@ def main(argv=None):
         (eng_on.sched.prefix_prompt_tokens - p0)
     warm_ttft = min(r["ttft_mean_ms"] for r in warm_runs)
     ttft_speedup = cold["ttft_mean_ms"] / warm_ttft
-    eng_off = make_engine(params, cfg, kv_bits=8, max_batch=8,
+    eng_off = make_engine(params, cfg, kv_bits=args.kv_bits, max_batch=8,
                           max_seq_len=px_seq)
     eng_off.run(prompts[:1], max_new=2)
     off_floor = decode_floor(eng_off, shared, max_new=px_new)
@@ -368,8 +389,67 @@ def main(argv=None):
               f"{px_lat:.2f} > 1.05")
     px_stats = eng_on.prefix_cache_stats()
 
-    # -- speculative decoding at batch 8 ------------------------------------
+    # -- packed-int4 pool: functional + bit-exactness gates -----------------
+    # e2e: chunked prefill + prefix caching + speculative decode on packed
+    # pages, still within the 3-program steady state
+    eng4 = spec_engine(params, cfg, kv_bits=4, k=SPEC_K)
     friendly = spec_prompts(cfg, SPEC_FRIENDLY)
+    r4 = eng4.run(friendly, max_new=32)
+    int4_tokens_ok = (all(len(t) == 32 for t in r4.tokens) and
+                      all(0 <= tok < cfg.vocab
+                          for t in r4.tokens for tok in t))
+    cc4 = eng4.compile_counts()
+    int4_programs_ok = (cc4["prefill"] == 0 and sum(cc4.values()) <= 3)
+    # warm prefix hits must map the exact packed codes + scales the cold
+    # pass wrote — never requantize or rewrite a shared page
+    eng4.run(shared, max_new=8)
+    cached = sorted(eng4.sched.cache._by_hash.values())
+    before = jax.device_get(eng4.pools)
+    h4 = eng4.sched.prefix_hit_tokens
+    eng4.run(shared, max_new=8)
+    after = jax.device_get(eng4.pools)
+    int4_replay_ok = bool(cached) and \
+        eng4.sched.prefix_hit_tokens > h4 and all(
+            np.array_equal(before[blk][leaf][:, cached],
+                           after[blk][leaf][:, cached])
+            for blk in before for leaf in ("k", "v", "k_s", "v_s"))
+    # speculative rollback: truncate == direct write of the accepted
+    # prefix, bit-exact on packed nibbles and scales (page-exact rollback)
+    geom = SimpleNamespace(n_kv_heads=2, hd=4)
+    pool4 = kv_pool.init_pool(geom, 8, 4, kv_bits=4)
+    rng4 = np.random.default_rng(3)
+    rows = jnp.asarray([[1, 2, 3], [4, 5, 6]], jnp.int32)
+    hist = jnp.asarray(rng4.normal(size=(2, 5, 2, 4)), jnp.float32)
+    start = jnp.asarray([3, 1], jnp.int32)
+    pool4 = kv_pool.write_chunk(pool4, hist, hist, rows,
+                                jnp.zeros(2, jnp.int32), start)
+    kw = jnp.asarray(rng4.normal(size=(2, 5, 2, 4)), jnp.float32)
+    vw = jnp.asarray(rng4.normal(size=(2, 5, 2, 4)), jnp.float32)
+    n_keep = jnp.asarray([2, 4], jnp.int32)
+    snap = {leaf: pool4[leaf][rows] for leaf in pool4}
+    pfull = kv_pool.write_chunk(pool4, kw, vw, rows, start,
+                                jnp.full(2, 5, jnp.int32))
+    rolled = kv_pool.truncate(pfull, rows, snap, kw, vw, start, n_keep)
+    direct = kv_pool.write_chunk(pool4, kw, vw, rows, start, n_keep)
+    int4_trunc_ok = all(np.array_equal(np.asarray(rolled[leaf]),
+                                       np.asarray(direct[leaf]))
+                        for leaf in pool4)
+    print(f"# int4 pool: e2e tokens {int4_tokens_ok}, programs {cc4} "
+          f"(<=3 {int4_programs_ok}), prefix replay bit-exact "
+          f"{int4_replay_ok}, truncate bit-exact {int4_trunc_ok}")
+    for cond, msg in ((int4_tokens_ok, "int4 engine emitted invalid tokens"),
+                      (int4_programs_ok,
+                       f"int4 engine exceeds 3 steady-state programs: "
+                       f"{cc4}"),
+                      (int4_replay_ok,
+                       "int4 warm prefix hits rewrote packed pages"),
+                      (int4_trunc_ok,
+                       "int4 truncate differs from direct write")):
+        if not cond:
+            ok = False
+            print(f"FAIL: {msg}")
+
+    # -- speculative decoding at batch 8 ------------------------------------
     adversarial = spec_prompts(cfg, SPEC_ADVERSARIAL)
     spec = {"k": SPEC_K, "decode_tok_s": {}, "acceptance_rate": {}}
     for kv_bits in (16, 8):
@@ -447,10 +527,16 @@ def main(argv=None):
         doc = {
             "config": {"arch": args.arch, "full": args.full,
                        "smoke": args.smoke, "page_size": PAGE,
-                       "chunk_pages": CHUNK_PAGES,
+                       "chunk_pages": CHUNK_PAGES, "kv_bits": args.kv_bits,
                        "prompt_len": prompt_len, "max_new": max_new},
             "kv_bytes_per_token": {str(k): v for k, v in bpt.items()},
             "kv_bytes_ratio": ratio,
+            "kv_bytes_ratio_int4": ratio4,
+            "int4": {"tokens_ok": int4_tokens_ok,
+                     "compile_counts": cc4,
+                     "programs_ok": int4_programs_ok,
+                     "prefix_replay_bitexact": int4_replay_ok,
+                     "truncate_bitexact": int4_trunc_ok},
             "kernel_parity": kernel_ok,
             "prefill": {m: {k: v for k, v in s.items() if k != "decode_dts"}
                         for m, s in stats.items()},

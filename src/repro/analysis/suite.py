@@ -9,7 +9,9 @@ drives through the continuous-batching engine.
 
 Input tagging is automatic for pytree arguments (`auto_tags`): QTensor
 leaves tag as quant data / per-channel scales, int8 pool pages as quant
-data, `k_s`/`v_s`/`*scale*` float leaves as scales.
+data, uint8 pool pages as packed int4 data (the nibble pages of a
+kv_bits=4 pool — the packed-int4-upcast invariant bites on them),
+`k_s`/`v_s`/`*scale*` float leaves as scales.
 """
 from __future__ import annotations
 
@@ -66,6 +68,8 @@ def auto_tags(args: tuple, overrides: Dict[int, str] = None) -> Dict[int, str]:
         dtype = getattr(leaf, "dtype", None)
         if dtype == jnp.int8:
             tags[i] = "quant"
+        elif dtype == jnp.uint8:
+            tags[i] = "packed"       # nibble-packed int4 KV pages
         elif (dtype is not None and jnp.issubdtype(dtype, jnp.floating)
               and ("scale" in last or last in ("k_s", "v_s"))):
             tags[i] = "scale"
@@ -183,15 +187,17 @@ def spec_ptq_block(qname: str = "int8") -> TraceSpec:
     return TraceSpec(f"ptq_block_{qname}", fwd, args, auto_tags(args))
 
 
-def spec_serving_decode() -> TraceSpec:
+def spec_serving_decode(kv_bits: int = 8) -> TraceSpec:
     """The paged serving decode step (the path bench_serving.py measures):
-    int8 page pools + per-(page, head) scales through decode_step_paged."""
+    int8 (or packed-int4 uint8, kv_bits=4) page pools + per-(page, head)
+    scales through decode_step_paged — the int4 trace makes the
+    packed-int4-never-upcast-before-shift invariant bite on serving."""
     from repro.configs import get_arch, reduced
     from repro.models import transformer
     cfg = reduced(get_arch("pangu_1b"))
     params = transformer.init_params(jax.random.PRNGKey(0), cfg)
     b, page, n_pages, w = 2, 8, 5, 2
-    pools = transformer.init_paged_pools(cfg, n_pages, page, kv_bits=8)
+    pools = transformer.init_paged_pools(cfg, n_pages, page, kv_bits=kv_bits)
     page_table = jnp.ones((b, w), jnp.int32)
     tokens = jnp.zeros((b,), jnp.int32)
     pos = jnp.zeros((b,), jnp.int32)
@@ -201,15 +207,18 @@ def spec_serving_decode() -> TraceSpec:
             params, pools, page_table, tokens, pos, cfg, paged_impl="xla")
         return logits
 
+    name = ("serving_decode" if kv_bits == 8
+            else f"serving_decode_int{kv_bits}")
     args = (params, pools, page_table, tokens, pos)
-    return TraceSpec("serving_decode", step, args, auto_tags(args))
+    return TraceSpec(name, step, args, auto_tags(args))
 
 
-def spec_serving_prefill_chunk() -> TraceSpec:
+def spec_serving_prefill_chunk(kv_bits: int = 8) -> TraceSpec:
     """The chunked mixed prefill/decode step (the chunked-engine path
-    bench_serving.py measures): fused quantize-on-write into int8 pages —
-    scale-once and int8-accum must hold through write_chunk's
-    dequant -> merge -> requantize as well as the attention read."""
+    bench_serving.py measures): fused quantize-on-write into int8 (or
+    packed-int4, kv_bits=4) pages — scale-once and int8-accum must hold
+    through write_chunk's dequant -> merge -> requantize (for int4: the
+    shift-unpack, then pack-on-store) as well as the attention read."""
     from repro.configs import get_arch, reduced
     from repro.models import transformer
     from repro.serving.kv_pool import chunk_window_pages
@@ -217,7 +226,7 @@ def spec_serving_prefill_chunk() -> TraceSpec:
     params = transformer.init_params(jax.random.PRNGKey(0), cfg)
     b, page, n_pages, w, c = 2, 8, 9, 3, 16
     wc = chunk_window_pages(c, page)
-    pools = transformer.init_paged_pools(cfg, n_pages, page, kv_bits=8)
+    pools = transformer.init_paged_pools(cfg, n_pages, page, kv_bits=kv_bits)
     page_table = jnp.ones((b, w), jnp.int32)
     window_rows = jnp.ones((b, wc), jnp.int32)
     tokens = jnp.zeros((b, c), jnp.int32)
@@ -230,8 +239,10 @@ def spec_serving_prefill_chunk() -> TraceSpec:
             cfg, paged_impl="xla")
         return logits
 
+    name = ("serving_prefill_chunk" if kv_bits == 8
+            else f"serving_prefill_chunk_int{kv_bits}")
     args = (params, pools, page_table, window_rows, tokens, q_start, n_new)
-    return TraceSpec("serving_prefill_chunk", step, args, auto_tags(args))
+    return TraceSpec(name, step, args, auto_tags(args))
 
 
 def spec_serving_prefill_chunk_cached() -> TraceSpec:
@@ -331,4 +342,6 @@ def default_specs(*, fast: bool = False) -> List[TraceSpec]:
         specs.append(spec_serving_prefill_chunk())
         specs.append(spec_serving_prefill_chunk_cached())
         specs.append(spec_serving_verify_step())
+        specs.append(spec_serving_decode(kv_bits=4))
+        specs.append(spec_serving_prefill_chunk(kv_bits=4))
     return specs

@@ -58,7 +58,8 @@ class QuantConfig:
     smooth_alpha: float = 0.5           # paper uses alpha = 0.5
     hadamard: bool = False              # QuaRot-style block rotation
     hadamard_block: int = 128           # block size of the online FWHT
-    kv_bits: int = 16                   # 8 => int8 KV cache (beyond-paper)
+    kv_bits: int = 16                   # 8 => int8, 4 => packed-int4 KV
+                                        # cache (beyond-paper)
     symmetric: bool = True              # paper: symmetric only
 
     def __post_init__(self):
@@ -278,6 +279,35 @@ def unpack_int4_halves(packed: jax.Array, group: int) -> jax.Array:
     hi = jnp.right_shift(pg, 4)
     out = jnp.concatenate([lo, hi], axis=1)  # (K//g, g, N)
     return out.reshape(2 * k2, n).astype(jnp.int8)
+
+
+def pack_int4_halves_lastdim(x: jax.Array) -> jax.Array:
+    """Grouped-halves pack along the *last* axis — the paged KV-pool page
+    layout (group == the whole last dim: byte j holds lo = x[..., j],
+    hi = x[..., j + D/2]). Unlike the weight-side `pack_int4_halves` the
+    packed dtype is uint8, so pool code and kernels can discriminate
+    packed-int4 pages from plain int8 pages by dtype alone.
+    x: (..., D) int8 in [-8, 7], D even -> (..., D//2) uint8.
+    """
+    assert x.dtype == jnp.int8
+    d = x.shape[-1]
+    assert d % 2 == 0, f"last dim {d} must be even to nibble-pack"
+    lo = x[..., : d // 2]
+    hi = x[..., d // 2:]
+    return ((hi << 4) | (lo & 0x0F)).astype(jnp.uint8)
+
+
+def unpack_int4_halves_lastdim(packed: jax.Array) -> jax.Array:
+    """Inverse of pack_int4_halves_lastdim: (..., D//2) uint8 -> (..., D)
+    int8. The uint8 -> int8 astype is a same-width reinterpret (XLA integer
+    conversions wrap), so the shift-based sign extension sees the stored
+    bit pattern unchanged — works identically inside Pallas kernel bodies.
+    """
+    assert packed.dtype == jnp.uint8
+    b = packed.astype(jnp.int8)
+    lo = jnp.right_shift(jnp.left_shift(b, 4), 4)
+    hi = jnp.right_shift(b, 4)
+    return jnp.concatenate([lo, hi], axis=-1)
 
 
 # ---------------------------------------------------------------------------

@@ -78,16 +78,19 @@ def _pad_m(x: jax.Array, mult: int):
 # ---------------------------------------------------------------------------
 
 def paged_pool_scales(k_pages, k_scale, v_scale):
-    """Normalize per-(page, head) scale inputs for the paged kernels: int8
-    pools pass their real scales through; float pools get dummy all-ones
-    scales so one kernel signature serves both. Returns
-    (k_scale, v_scale, quantized)."""
-    quantized = k_pages.dtype == jnp.int8
+    """Normalize per-(page, head) scale inputs for the paged kernels:
+    quantized pools pass their real scales through; float pools get dummy
+    all-ones scales so one kernel signature serves all dtypes. `packed`
+    flags uint8 nibble pages (kv_bits=4) whose last dim is head_dim // 2 —
+    kernel bodies must shift-unpack before dequantizing. Returns
+    (k_scale, v_scale, quantized, packed)."""
+    quantized = k_pages.dtype in (jnp.int8, jnp.uint8)
+    packed = k_pages.dtype == jnp.uint8
     if not quantized:
         n_pages, _, nkv, _ = k_pages.shape
         ones = jnp.ones((n_pages, nkv), jnp.float32)
         k_scale, v_scale = ones, ones
-    return k_scale, v_scale, quantized
+    return k_scale, v_scale, quantized, packed
 
 
 def paged_block_specs(w: int, page: int, hd: int):

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.quant.qtypes import unpack_int4_halves_lastdim
 from repro.kernels import ops, tpu_compiler_params
 
 NEG_INF = -1e30
@@ -31,7 +32,7 @@ NEG_INF = -1e30
 
 def _kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref,
             m_ref, l_ref, acc_ref, *, page: int, scale: float,
-            quantized: bool):
+            quantized: bool, packed: bool):
     b = pl.program_id(0)
     j = pl.program_id(2)
 
@@ -46,8 +47,13 @@ def _kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref,
     @pl.when(j * page < klen)
     def _block():
         q = q_ref[0, 0].astype(jnp.float32) * scale          # (hper, hd)
-        k = k_ref[0, :, 0, :].astype(jnp.float32)            # (page, hd)
-        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        k = k_ref[0, :, 0, :]                                # (page, hd[/2])
+        v = v_ref[0, :, 0, :]
+        if packed:                 # in-register nibble unpack: (page, hd)
+            k = unpack_int4_halves_lastdim(k)
+            v = unpack_int4_halves_lastdim(v)
+        k = k.astype(jnp.float32)
+        v = v.astype(jnp.float32)
         if quantized:
             k = k * ks_ref[0, 0]
             v = v * vs_ref[0, 0]
@@ -76,25 +82,25 @@ def _kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref,
 def paged_decode_attention(q, k_pages, v_pages, k_scale, v_scale,
                            page_table, kv_lengths, *,
                            interpret: bool = False):
-    """q: (B, nq, hd); k_pages/v_pages: (P, page, nkv, hd) int8 or float;
-    k_scale/v_scale: (P, nkv) f32 (int8 pools) or None; page_table: (B, W)
-    physical page ids; kv_lengths: (B,) valid keys (>= 1).
-    Returns (B, nq, hd) in q.dtype."""
+    """q: (B, nq, hd); k_pages/v_pages: (P, page, nkv, hd) int8/float or
+    (P, page, nkv, hd//2) uint8 packed int4; k_scale/v_scale: (P, nkv) f32
+    (quantized pools) or None; page_table: (B, W) physical page ids;
+    kv_lengths: (B,) valid keys (>= 1). Returns (B, nq, hd) in q.dtype."""
     b, nq, hd = q.shape
-    n_pages, page, nkv, _ = k_pages.shape
+    n_pages, page, nkv, hd_kv = k_pages.shape      # hd_kv = hd//2 if packed
     w = page_table.shape[1]
     hper = nq // nkv
     assert nq == nkv * hper, (nq, nkv)
-    k_scale, v_scale, quantized = ops.paged_pool_scales(
+    k_scale, v_scale, quantized, packed = ops.paged_pool_scales(
         k_pages, k_scale, v_scale)
 
     qg = q.reshape(b, nkv, hper, hd)
     pt_flat = page_table.reshape(-1).astype(jnp.int32)
 
     kern = functools.partial(_kernel, page=page, scale=1.0 / (hd ** 0.5),
-                             quantized=quantized)
+                             quantized=quantized, packed=packed)
     grid = (b, nkv, w)
-    page_spec, scale_spec = ops.paged_block_specs(w, page, hd)
+    page_spec, scale_spec = ops.paged_block_specs(w, page, hd_kv)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
@@ -135,8 +141,11 @@ def paged_decode_attention_ref(q, k_pages, v_pages, k_scale, v_scale,
     hper = nq // nkv
 
     def read(pages, scales):
-        g = pages[page_table].astype(jnp.float32)      # (B, W, page, nkv, hd)
-        if pages.dtype == jnp.int8:
+        g = pages[page_table]                          # (B, W, page, nkv, hd)
+        if g.dtype == jnp.uint8:                       # packed int4 pages
+            g = unpack_int4_halves_lastdim(g)
+        g = g.astype(jnp.float32)
+        if pages.dtype in (jnp.int8, jnp.uint8):
             g = g * scales[page_table][:, :, None, :, None]
         return g.reshape(b, w * page, nkv, hd)
 

@@ -132,12 +132,17 @@ def paged_prefill_attention_ref(q, k_pages, v_pages, k_scale, v_scale,
 
 def _read_pages(pages, scales, page_table):
     """Gather + dequantize a page table's worth of KV: (B, W*page, nkv, hd)
-    f32."""
+    f32. uint8 pages are packed int4 (two nibbles per byte along head_dim,
+    grouped halves) — shift-unpacked before the scale is applied, so hd
+    here is twice the stored last dim."""
     b, w = page_table.shape
-    _, page, nkv, hd = pages.shape
-    g = pages[page_table].astype(jnp.float32)          # (B, W, page, nkv, hd)
-    if pages.dtype == jnp.int8:
+    g = pages[page_table]                              # (B, W, page, nkv, .)
+    if g.dtype == jnp.uint8:
+        g = qtypes.unpack_int4_halves_lastdim(g)
+    g = g.astype(jnp.float32)
+    if pages.dtype in (jnp.int8, jnp.uint8):
         g = g * scales[page_table][:, :, None, :, None]
+    _, _, page, nkv, hd = g.shape
     return g.reshape(b, w * page, nkv, hd)
 
 

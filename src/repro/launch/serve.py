@@ -40,6 +40,10 @@ def _validate(ap: argparse.ArgumentParser, args) -> None:
                  "verify step reuses the chunk-attention machinery)")
     if args.spec_decode and args.engine != "continuous":
         ap.error("--spec-decode requires --engine continuous")
+    if args.kv_bits == 4 and args.engine != "continuous":
+        ap.error("--kv-bits 4 requires --engine continuous (packed-int4 "
+                 "KV lives in the paged pool; the dense batch cache "
+                 "supports 8/16 only)")
     if args.engine == "continuous":
         if args.chunk_pages < 1:
             ap.error("--chunk-pages must be >= 1")
@@ -65,7 +69,7 @@ def main(argv=None):
     ap.add_argument("--quant", default="int8",
                     choices=["fp16", "int8", "w4a8", "w4a8-smooth",
                              "w4a8-smooth-auto", "w4a8-hadamard"])
-    ap.add_argument("--kv-bits", type=int, default=16, choices=[8, 16])
+    ap.add_argument("--kv-bits", type=int, default=16, choices=[4, 8, 16])
     ap.add_argument("--engine", default="batch",
                     choices=["batch", "continuous"])
     ap.add_argument("--page-size", type=int, default=16)

@@ -475,7 +475,11 @@ def supports_paged(cfg) -> bool:
 def init_paged_pools(cfg, n_pages: int, page_size: int, kv_bits: int = 16,
                      dtype=jnp.bfloat16) -> dict:
     """Per-block page pools with the (G, ...) stacked structure the decode
-    scan expects (mirrors init_caches)."""
+    scan expects (mirrors init_caches). kv_bits selects the pool dtype —
+    16 (dense `dtype`), 8 (int8 + per-(page, head) scales) or 4 (uint8
+    nibble-packed int4, head_dim halved in storage); every jitted step
+    below reads the pool dtype back off the leaves, so the same step
+    functions serve all three."""
     from repro.serving import kv_pool   # serving imports models at init
     assert supports_paged(cfg), \
         f"paged decode supports patterns {PAGED_PATTERNS}, full attention"
@@ -536,10 +540,10 @@ def prefill_chunk_paged(params, pools, page_table, window_rows, tokens,
     decode, 0 = idle); window_rows: (B, Wc) write-window pages
     (kv_pool.write_chunk); page_table: (B, W) full table for reads.
 
-    Each block quantizes the chunk's K/V straight into int8 pages
-    (per-(page, head) scales) and attends causally over written pages plus
-    the in-flight chunk. Returns (logits (B, V) f32 at each slot's last
-    valid token, pools)."""
+    Each block quantizes the chunk's K/V straight into int8 or packed-int4
+    pages (per-(page, head) scales) and attends causally over written pages
+    plus the in-flight chunk. Returns (logits (B, V) f32 at each slot's
+    last valid token, pools)."""
     c = tokens.shape[1]
     x = params["embed"]["w"].astype(dtype)[tokens]            # (B, C, d)
 

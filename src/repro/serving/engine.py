@@ -193,8 +193,9 @@ class ContinuousBatchingEngine:
     quantize-on-write path and rolling back rejected suffixes page-exactly
     (kv_pool.truncate + scheduler.truncate_to). With sampler="greedy" and
     bf16 pools the emitted tokens are bit-exact with vanilla greedy decode
-    (int8 pools score the draft window's K/V pre-quantization, a deviation
-    within quantization noise); sampler="temperature" accepts via
+    (quantized int8/int4 pools score the draft window's K/V
+    pre-quantization, a deviation within quantization noise);
+    sampler="temperature" accepts via
     rejection sampling (sampling.speculative_accept), preserving the
     target distribution. A cost-model gate bounds the overhead on
     n-gram-free workloads: a verify step only runs when the drafted total
@@ -220,6 +221,8 @@ class ContinuousBatchingEngine:
             f"pattern={cfg.pattern} (supported {transformer.PAGED_PATTERNS}),"
             f" sliding_window={cfg.sliding_window} (need 0), "
             f"frontend={cfg.frontend!r} (need 'tokens')")
+        assert kv_bits in (16, 8, 4), \
+            f"kv_bits must be 16, 8 or 4 (packed int4); got {kv_bits}"
         self.params = params
         self.cfg = cfg
         self.page_size = page_size

@@ -1,11 +1,18 @@
-"""Paged KV cache: a fixed pool of fixed-size pages with per-page int8
-quantization (per-head scales) and free-list reuse.
+"""Paged KV cache: a fixed pool of fixed-size pages with per-page int8 or
+packed-int4 quantization (per-head scales) and free-list reuse.
 
 Layout per transformer block (leading scan-group axis G added by
 `transformer.init_paged_pools`):
 
-    k, v   : (P, page_size, n_kv_heads, head_dim)   int8 | cache dtype
-    k_s,v_s: (P, n_kv_heads) float32                (int8 pools only)
+    k, v   : (P, page_size, n_kv_heads, head_dim)      int8 | cache dtype
+             (P, page_size, n_kv_heads, head_dim // 2) uint8, kv_bits=4:
+             two nibbles per byte along head_dim in the grouped-halves
+             layout (`qtypes.pack_int4_halves_lastdim`)
+    k_s,v_s: (P, n_kv_heads) float32                   (quantized pools)
+
+The leaf dtype is the discriminator — uint8 means packed int4, int8 means
+int8, floats mean an unquantized pool — so kernels and oracles that only
+see bare arrays can pick the right read path without any config plumbing.
 
 Physical page 0 is reserved as the *scratch page*: unassigned page-table
 entries point at it, so every gather/scatter stays shape-static and
@@ -30,7 +37,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.quant.qtypes import paper_scale, qmax, qmin
+from repro.core.quant.qtypes import (pack_int4_halves_lastdim, paper_scale,
+                                     qmax, qmin, unpack_int4_halves_lastdim)
 
 SCRATCH_PAGE = 0
 
@@ -132,18 +140,32 @@ class PageAllocator:
 
 def init_pool(cfg, n_pages: int, page_size: int, kv_bits: int = 16,
               dtype=jnp.bfloat16) -> dict:
+    assert kv_bits in (16, 8, 4), f"unsupported kv_bits {kv_bits}"
     nkv, hd = cfg.n_kv_heads, cfg.hd
     shape = (n_pages, page_size, nkv, hd)
+    scales = {"k_s": jnp.zeros((n_pages, nkv), jnp.float32),
+              "v_s": jnp.zeros((n_pages, nkv), jnp.float32)}
     if kv_bits == 8:
         return {"k": jnp.zeros(shape, jnp.int8),
-                "v": jnp.zeros(shape, jnp.int8),
-                "k_s": jnp.zeros((n_pages, nkv), jnp.float32),
-                "v_s": jnp.zeros((n_pages, nkv), jnp.float32)}
+                "v": jnp.zeros(shape, jnp.int8), **scales}
+    if kv_bits == 4:
+        assert hd % 2 == 0, f"head_dim {hd} must be even for packed int4"
+        pshape = (n_pages, page_size, nkv, hd // 2)
+        return {"k": jnp.zeros(pshape, jnp.uint8),
+                "v": jnp.zeros(pshape, jnp.uint8), **scales}
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
 def pool_is_quantized(pool: dict) -> bool:
-    return pool["k"].dtype == jnp.int8
+    return pool["k"].dtype in (jnp.int8, jnp.uint8)
+
+
+def pool_kv_bits(pool: dict) -> int:
+    """Recover kv_bits from the leaf dtype (uint8 = packed int4)."""
+    dt = pool["k"].dtype
+    if dt == jnp.uint8:
+        return 4
+    return 8 if dt == jnp.int8 else 16
 
 
 def pool_bytes(pool: dict) -> int:
@@ -157,13 +179,28 @@ def bytes_per_token(pool: dict) -> float:
     return pool_bytes(pool) / (n_pages * page)
 
 
-def _quantize_pages(x: jax.Array):
-    """x: (..., page, nkv, hd) -> (int8 pages, per (page, head) scale)."""
+def _quantize_pages(x: jax.Array, bits: int = 8):
+    """x: (..., page, nkv, hd) -> (quantized pages, per (page, head) scale).
+
+    bits=8 yields int8 codes; bits=4 narrow-clips to [-7, 7] and packs two
+    nibbles per byte along head_dim (uint8, grouped halves) so no dense
+    intermediate wider than the packed page ever lands in the pool.
+    """
     am = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=(-3, -1))   # (..., nkv)
-    s = paper_scale(am, 8)
+    s = paper_scale(am, bits)
     q = jnp.clip(jnp.round(x.astype(jnp.float32) / s[..., None, :, None]),
-                 qmin(8), qmax(8)).astype(jnp.int8)
+                 qmin(bits), qmax(bits)).astype(jnp.int8)
+    if bits == 4:
+        return pack_int4_halves_lastdim(q), s
     return q, s
+
+
+def _unpack_gathered(pages: jax.Array) -> jax.Array:
+    """Undo nibble packing on gathered pages (uint8 leaves only); int8 and
+    float pages pass through untouched."""
+    if pages.dtype == jnp.uint8:
+        return unpack_int4_halves_lastdim(pages)
+    return pages
 
 
 # -- prefill: bulk page fill -------------------------------------------------
@@ -186,10 +223,12 @@ def write_prefill(pool: dict, k: jax.Array, v: jax.Array,
     ids = page_rows.reshape(-1)
     pool = dict(pool)
     if pool_is_quantized(pool):
-        kq, ks = _quantize_pages(kz)
-        vq, vs = _quantize_pages(vz)
-        pool["k"] = pool["k"].at[ids].set(kq.reshape(-1, page, nkv, hd))
-        pool["v"] = pool["v"].at[ids].set(vq.reshape(-1, page, nkv, hd))
+        bits = pool_kv_bits(pool)
+        kq, ks = _quantize_pages(kz, bits)
+        vq, vs = _quantize_pages(vz, bits)
+        # kq/vq last dim is hd//2 for packed int4 — reshape shape-generically
+        pool["k"] = pool["k"].at[ids].set(kq.reshape(-1, *kq.shape[2:]))
+        pool["v"] = pool["v"].at[ids].set(vq.reshape(-1, *vq.shape[2:]))
         pool["k_s"] = pool["k_s"].at[ids].set(ks.reshape(-1, nkv))
         pool["v_s"] = pool["v_s"].at[ids].set(vs.reshape(-1, nkv))
     else:
@@ -250,11 +289,12 @@ def write_chunk(pool: dict, k: jax.Array, v: jax.Array,
     use_new = ((j >= 0) & (j < n_new[:, None]))[..., None, None]
     ids = window_rows.reshape(-1)
     quantized = pool_is_quantized(pool)
+    bits = pool_kv_bits(pool)
     pool = dict(pool)
     for name, s_name, tok in (("k", "k_s", k), ("v", "v_s", v)):
         gathered = (src[name] if src is not None
                     else pool[name][window_rows])
-        pages = gathered.astype(jnp.float32)                  # (B,Wc,page,..)
+        pages = _unpack_gathered(gathered).astype(jnp.float32)  # (B,Wc,p,..)
         if quantized:
             sc = (src[s_name] if src is not None
                   else pool[s_name][window_rows])             # (B, Wc, nkv)
@@ -266,9 +306,9 @@ def write_chunk(pool: dict, k: jax.Array, v: jax.Array,
         f = jnp.where(use_new, newv, f)
         f = f.reshape(b, wc, page, nkv, hd)
         if quantized:
-            q, s = _quantize_pages(f)
+            q, s = _quantize_pages(f, bits)
             pool[name] = pool[name].at[ids].set(
-                q.reshape(-1, page, nkv, hd))
+                q.reshape(-1, *q.shape[2:]))
             pool[s_name] = pool[s_name].at[ids].set(s.reshape(-1, nkv))
         else:
             pool[name] = pool[name].at[ids].set(
@@ -307,13 +347,13 @@ def truncate(pool: dict, window_rows: jax.Array, snap: dict, k: jax.Array,
 
 # -- decode: one token per sequence ------------------------------------------
 
-def _requant_page(pages_f, new_tok, slot):
+def _requant_page(pages_f, new_tok, slot, bits=8):
     """pages_f: (B, page, nkv, hd) f32 (already dequantized + masked);
     new_tok: (B, nkv, hd); slot: (B,) write slot. Returns (q, scale)."""
     b = pages_f.shape[0]
     pages_f = pages_f.at[jnp.arange(b), slot].set(
         new_tok.astype(jnp.float32))
-    return _quantize_pages(pages_f)
+    return _quantize_pages(pages_f, bits)
 
 
 def write_token(pool: dict, page_table: jax.Array, pos: jax.Array,
@@ -332,13 +372,15 @@ def write_token(pool: dict, page_table: jax.Array, pos: jax.Array,
     if pool_is_quantized(pool):
         # Gather page, dequantize, zero not-yet-written slots (pages are
         # reused without zeroing), extend, requantize per (page, head).
+        bits = pool_kv_bits(pool)
         live = jnp.arange(page)[None, :, None, None] <= slot[:, None, None,
                                                             None]
         for name, s_name, tok in (("k", "k_s", k), ("v", "v_s", v)):
-            pg = pool[name][phys].astype(jnp.float32)           # (B,page,..)
+            pg = _unpack_gathered(pool[name][phys]).astype(
+                jnp.float32)                                    # (B,page,..)
             sc = pool[s_name][phys]                             # (B,nkv)
             pg = jnp.where(live, pg * sc[:, None, :, None], 0.0)
-            q, s_new = _requant_page(pg, tok, slot)
+            q, s_new = _requant_page(pg, tok, slot, bits)
             pool[name] = pool[name].at[phys].set(q)
             pool[s_name] = pool[s_name].at[phys].set(s_new)
     else:
@@ -358,7 +400,7 @@ def gather_kv(pool: dict, page_table: jax.Array):
     b, w = page_table.shape
     out = []
     for name, s_name in (("k", "k_s"), ("v", "v_s")):
-        pages = pool[name][page_table]                  # (B, W, page, nkv, hd)
+        pages = _unpack_gathered(pool[name][page_table])  # (B,W,page,nkv,hd)
         if pool_is_quantized(pool):
             sc = pool[s_name][page_table]               # (B, W, nkv)
             pages = pages.astype(jnp.float32) * sc[:, :, None, :, None]

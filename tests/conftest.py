@@ -1,0 +1,48 @@
+"""Shared fixtures for the serving/engine test suite.
+
+One tiny reduced model is initialized per session (`cfg_params`) instead of
+per test file, and `make_engine` is the single engine factory the engine
+tests build on. The `kv_bits` fixture parameterizes over every pool dtype —
+bf16, int8, and packed int4 — so engine-level guarantees (chunked prefill,
+prefix caching, preemption, speculative decode) are exercised under all
+three without per-file copy-paste.
+"""
+import jax
+import pytest
+
+from repro.configs import get_arch, reduced
+from repro.models import transformer
+from repro.serving import ContinuousBatchingEngine
+
+ALL_KV_BITS = (16, 8, 4)       # bf16 / int8 / packed-int4 pool dtypes
+QUANT_KV_BITS = (8, 4)         # the quantized pools (k_s/v_s scale leaves)
+
+
+@pytest.fixture(scope="session")
+def cfg_params():
+    """Reduced pangu_1b config + params, shared across the whole session
+    (read-only — tests must not mutate either)."""
+    cfg = reduced(get_arch("pangu_1b"))
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+@pytest.fixture(params=ALL_KV_BITS)
+def kv_bits(request):
+    """Every pool dtype: 16 (bf16), 8 (int8), 4 (packed int4)."""
+    return request.param
+
+
+def make_engine(params, cfg, *, page_size=8, max_batch=3, max_seq_len=64,
+                **kw):
+    """The continuous-batching engine with the tiny-test geometry defaults
+    the engine tests share; any engine kwarg (kv_bits, n_pages,
+    prefix_cache, spec_decode, ...) can be overridden."""
+    return ContinuousBatchingEngine(params, cfg, page_size=page_size,
+                                    max_batch=max_batch,
+                                    max_seq_len=max_seq_len, **kw)
+
+
+def pool_leaves(kv_bits):
+    """The pool leaf names a dtype carries (quantized pools add scales)."""
+    return ("k", "v", "k_s", "v_s") if kv_bits != 16 else ("k", "v")

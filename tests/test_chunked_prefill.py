@@ -1,7 +1,8 @@
 """Chunked-prefill regression tests: fused quantize-on-write page writes
-(`kv_pool.write_chunk` vs the one-shot and per-token paths), the chunk
-attention kernel (Pallas interpret vs jnp oracle vs dense causal SDPA), and
-chunked-vs-one-shot engine equivalence including preemption mid-prefill."""
+(`kv_pool.write_chunk` vs the one-shot and per-token paths) across all pool
+dtypes (bf16/int8/packed-int4), the chunk attention kernel (Pallas
+interpret vs jnp oracle vs dense causal SDPA), and chunked-vs-one-shot
+engine equivalence including preemption mid-prefill."""
 from types import SimpleNamespace
 
 import numpy as np
@@ -9,12 +10,11 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-from repro.configs import get_arch, reduced
+from conftest import make_engine, pool_leaves
 from repro.kernels.paged_prefill import (paged_prefill_attention,
                                          paged_prefill_attention_ref)
 from repro.models import attention as attn
-from repro.models import transformer
-from repro.serving import ContinuousBatchingEngine, kv_pool
+from repro.serving import kv_pool
 
 
 def _geom(nkv, hd):
@@ -33,7 +33,6 @@ def _pool_with_tables(b, n_seq_pages, page, nkv, hd, kv_bits):
 # write_prefill edge cases
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("kv_bits", [16, 8])
 @pytest.mark.parametrize("n", [16, 1, 5])   # exact page multiple, single, odd
 def test_write_prefill_edge_cases(kv_bits, n):
     """Page-multiple prompts, a length-1 prompt, and scratch-padded bucket
@@ -54,7 +53,9 @@ def test_write_prefill_edge_cases(kv_bits, n):
     full = jnp.asarray(np.arange(1, 5, dtype=np.int32)[None, :])
     kc, _ = kv_pool.gather_kv(pool, full)
     got = np.asarray(kc, np.float32)
-    tol = 2 * np.abs(k[:, :n]).max() / 255 if kv_bits == 8 else 0.02
+    am = float(np.abs(k[:, :n]).max())
+    # quantized pools: one page-scale step of error (clip at the extremes)
+    tol = {16: 0.02, 8: 2 * am / 255, 4: 2 * am / 15}[kv_bits]
     np.testing.assert_allclose(got[:, :n], k[:, :n], atol=tol)
     # positions past the length were zeroed before quantization: the 37s
     # can't inflate the page scale or survive in the pool
@@ -68,12 +69,11 @@ def test_write_prefill_edge_cases(kv_bits, n):
 # write_chunk vs the one-shot and per-token write paths
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("kv_bits", [16, 8])
 def test_write_chunk_matches_write_prefill(kv_bits):
     """Page-aligned chunks of a prompt land bit-identical to the one-shot
-    write_prefill scatter — same int8 codes *and* same per-(page, head)
-    scales (fused quantize-on-write is not an approximation of the legacy
-    two-pass path on fresh pages)."""
+    write_prefill scatter — same quantized codes (int8 bytes or packed int4
+    nibbles) *and* same per-(page, head) scales (fused quantize-on-write is
+    not an approximation of the legacy two-pass path on fresh pages)."""
     page, nkv, hd, b, n = 8, 2, 16, 2, 40          # 5 pages
     c = 2 * page                                   # chunk = 2 pages
     wc = kv_pool.chunk_window_pages(c, page)
@@ -102,20 +102,21 @@ def test_write_chunk_matches_write_prefill(kv_bits):
             jnp.asarray(rows), jnp.full((b,), start, jnp.int32),
             jnp.full((b,), n_new, jnp.int32))
 
-    for name in (("k", "v", "k_s", "v_s") if kv_bits == 8 else ("k", "v")):
+    for name in pool_leaves(kv_bits):
         np.testing.assert_array_equal(
             np.asarray(got_pool[name][1:]), np.asarray(ref_pool[name][1:]),
             err_msg=name)
 
 
-def test_write_chunk_decode_matches_write_token():
+@pytest.mark.parametrize("kv_bits", [8, 4])
+def test_write_chunk_decode_matches_write_token(kv_bits):
     """A riding decode slot (n_new=1 at an unaligned position) through
     write_chunk is bit-identical to the dedicated write_token path: same
-    dequant -> mask -> merge -> requant semantics."""
+    dequant (unpack for int4) -> mask -> merge -> requant semantics."""
     page, nkv, hd, b = 8, 2, 16, 2
     c = page                                       # 1-page chunks, wc = 2
     wc = kv_pool.chunk_window_pages(c, page)
-    tok_pool, pt = _pool_with_tables(b, 2, page, nkv, hd, 8)
+    tok_pool, pt = _pool_with_tables(b, 2, page, nkv, hd, kv_bits)
     chk_pool = {k_: v_ for k_, v_ in tok_pool.items()}
     pt_np = np.asarray(pt)
     for pos in range(12):                          # crosses a page boundary
@@ -147,7 +148,6 @@ def test_write_chunk_decode_matches_write_token():
     (3, 96, 8, 2, 32, 16, 16),       # GQA 4x
     (1, 128, 4, 1, 64, 32, 32),      # MQA
 ])
-@pytest.mark.parametrize("kv_bits", [16, 8])
 def test_paged_prefill_kernel_matches_ref(b, t, nq, nkv, hd, page, c,
                                           kv_bits):
     """Chunk queries at staggered q_start against a long paged cache:
@@ -180,7 +180,8 @@ def test_paged_prefill_kernel_matches_ref(b, t, nq, nkv, hd, page, c,
     mask = ((kpos <= qpos) & (kpos < kv_len[:, None, None]))[:, None]
     dense = attn._sdpa(q, jnp.asarray(k), jnp.asarray(v),
                        mask.transpose(0, 1, 2, 3), None)
-    tol = 0.12 if kv_bits == 8 else 0.03
+    # quant-noise tolerance grows ~(2^8-1)/(2^n-1) with narrower codes
+    tol = {16: 0.03, 8: 0.12, 4: 0.75}[kv_bits]
     rows = np.asarray(n_new)[:, None] > np.arange(c)[None, :]  # valid rows
     d = np.abs(np.asarray(got).reshape(b, c, -1)
                - np.asarray(dense).reshape(b, c, -1)).max(-1)
@@ -195,16 +196,15 @@ def _run(engine, prompts, max_new=6):
     return engine.run(prompts, mode="slow_think", max_new=max_new)
 
 
-def test_chunked_engine_matches_legacy_fp16():
+def test_chunked_engine_matches_legacy_fp16(cfg_params):
     """fp16 pools: the chunked mixed-step engine reproduces the legacy
     per-admission engine token-for-token, in exactly two steady-state
     compilations (mixed + decode, zero one-shot prefills)."""
-    cfg = reduced(get_arch("pangu_1b"))
-    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    cfg, params = cfg_params
     prompts = [[5, 6, 7], list(range(1, 20)), [9] * 11, [3, 1, 4, 1, 5]]
-    mk = dict(kv_bits=16, page_size=8, max_batch=4, max_seq_len=64)
-    leg = ContinuousBatchingEngine(params, cfg, prefill_mode="legacy", **mk)
-    ch = ContinuousBatchingEngine(params, cfg, **mk)
+    mk = dict(kv_bits=16, max_batch=4)
+    leg = make_engine(params, cfg, prefill_mode="legacy", **mk)
+    ch = make_engine(params, cfg, **mk)
     want, got = _run(leg, prompts), _run(ch, prompts)
     assert got.tokens == want.tokens
     assert got.prefill_tokens == sum(got.prompt_lens)
@@ -213,16 +213,14 @@ def test_chunked_engine_matches_legacy_fp16():
                                    "verify": 0}
 
 
-def test_chunked_engine_first_token_int8():
+def test_chunked_engine_first_token_int8(cfg_params):
     """int8 pools: chunked prefill quantizes each chunk once into its pages
     (the legacy path quantizes the whole prompt in one pass) — identical on
     fresh aligned pages, so first sampled tokens agree."""
-    cfg = reduced(get_arch("pangu_1b"))
-    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    cfg, params = cfg_params
     prompts = [list(range(1, 20)), [9] * 11, [3, 1, 4, 1, 5]]
-    mk = dict(kv_bits=8, page_size=8, max_batch=3, max_seq_len=64)
-    leg = ContinuousBatchingEngine(params, cfg, prefill_mode="legacy", **mk)
-    ch = ContinuousBatchingEngine(params, cfg, **mk)
+    leg = make_engine(params, cfg, kv_bits=8, prefill_mode="legacy")
+    ch = make_engine(params, cfg, kv_bits=8)
     want, got = _run(leg, prompts), _run(ch, prompts)
     first_leg = [t[0] for t in want.tokens]
     first_ch = [t[0] for t in got.tokens]
@@ -232,16 +230,16 @@ def test_chunked_engine_first_token_int8():
     assert agree >= len(prompts) - 1, (first_leg, first_ch)
 
 
-def test_chunked_pools_match_oneshot_pools():
-    """After chunked prefill, every block's int8 pages *and scales* equal
-    the one-shot write_prefill of the same dense prompt K/V."""
-    cfg = reduced(get_arch("pangu_1b"))
-    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+def test_chunked_pools_match_oneshot_pools(cfg_params, kv_bits):
+    """After chunked prefill, every block's pages *and scales* (bf16 bytes,
+    int8 codes, or packed int4 nibbles) equal the one-shot write_prefill of
+    the same dense prompt K/V."""
+    cfg, params = cfg_params
     page, n = 8, 19
     prompts = [list(range(1, n + 1))]
-    mk = dict(kv_bits=8, page_size=page, max_batch=1, max_seq_len=32)
-    leg = ContinuousBatchingEngine(params, cfg, prefill_mode="legacy", **mk)
-    ch = ContinuousBatchingEngine(params, cfg, **mk)
+    mk = dict(kv_bits=kv_bits, max_batch=1, max_seq_len=32)
+    leg = make_engine(params, cfg, prefill_mode="legacy", **mk)
+    ch = make_engine(params, cfg, **mk)
     # run exactly the prefill portion: submit + step until the first token
     for eng in (leg, ch):
         eng.submit(prompts[0], mode="no_think", max_new=4)
@@ -250,24 +248,23 @@ def test_chunked_pools_match_oneshot_pools():
     used = np.asarray(leg.sched.page_table[0][:-(-n // page)])
     assert (np.asarray(ch.sched.page_table[0][:len(used)]) == used).all()
     for blk in leg.pools:
-        for name in ("k", "v", "k_s", "v_s"):
+        for name in pool_leaves(kv_bits):
             np.testing.assert_array_equal(
                 np.asarray(ch.pools[blk][name][:, used]),
                 np.asarray(leg.pools[blk][name][:, used]),
                 err_msg=f"block {blk} {name}")
 
 
-def test_preemption_mid_prefill_preserves_outputs():
+def test_preemption_mid_prefill_preserves_outputs(cfg_params, kv_bits):
     """A pool too small to hold every prompt: requests get evicted while
     *partially prefilled* (pages freed, progress reset), recomputed, and
-    still finish with the roomy engine's tokens."""
-    cfg = reduced(get_arch("pangu_1b"))
-    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    still finish with the roomy engine's tokens — the deterministic
+    requantization on recompute makes this hold for every pool dtype."""
+    cfg, params = cfg_params
     prompts = [list(range(1, 20)), [9] * 17, [3, 1, 4, 1, 5, 9, 2, 6]]
-    mk = dict(kv_bits=8, page_size=8, max_batch=3, max_seq_len=64)
-    roomy = ContinuousBatchingEngine(params, cfg, **mk)
+    roomy = make_engine(params, cfg, kv_bits=kv_bits)
     want = _run(roomy, prompts, max_new=8)
-    tight = ContinuousBatchingEngine(params, cfg, n_pages=7, **mk)
+    tight = make_engine(params, cfg, kv_bits=kv_bits, n_pages=7)
     got = _run(tight, prompts, max_new=8)
     assert got.evictions > 0
     assert got.tokens == want.tokens

@@ -40,7 +40,7 @@ def make_pool_and_dense(b, t, nkv, hd, page, seed=0, kv_bits=8):
     (3, 96, 8, 2, 32, 16),       # GQA 4x, ragged lengths below
     (1, 256, 4, 1, 64, 32),      # MQA, longest cache
 ])
-@pytest.mark.parametrize("kv_bits", [16, 8])
+@pytest.mark.parametrize("kv_bits", [16, 8, 4])
 def test_paged_decode_matches_dense(b, t, nq, nkv, hd, page, kv_bits):
     """q_len=1 against a long paged cache == dense masked SDPA."""
     pool, pt, k, v = make_pool_and_dense(b, t, nkv, hd, page, kv_bits=kv_bits)
@@ -58,7 +58,8 @@ def test_paged_decode_matches_dense(b, t, nq, nkv, hd, page, kv_bits):
     # dense oracle over the *original* (unquantized) K/V
     mask = (jnp.arange(t)[None, :] < lens[:, None])[:, None, None, :]
     dense = attn._sdpa(q[:, None], k, v, mask, None)[:, 0]   # (B, nq*hd)
-    tol = 0.12 if kv_bits == 8 else 0.03     # int8 requant / bf16 pool
+    # quant noise grows with narrower codes: bf16 pool / int8 / packed int4
+    tol = {16: 0.03, 8: 0.12, 4: 0.5}[kv_bits]
     np.testing.assert_allclose(np.asarray(got).reshape(b, -1),
                                np.asarray(dense), rtol=tol, atol=tol)
 

@@ -1,13 +1,12 @@
 """Refcounted prefix caching: allocator sharing, chained page hashes, LRU
 eviction, scheduler admission hits, shared-page preemption, and engine-level
-bit-exactness of cache hits vs recompute (bf16 and int8 pools)."""
+bit-exactness of cache hits vs recompute (bf16, int8, and packed-int4
+pools)."""
 import jax
 import numpy as np
 import pytest
+from conftest import QUANT_KV_BITS, make_engine, pool_leaves
 
-from repro.configs import get_arch, reduced
-from repro.models import transformer
-from repro.serving import ContinuousBatchingEngine
 from repro.serving.kv_pool import SCRATCH_PAGE, PageAllocator
 from repro.serving.prefix_cache import PrefixCache, page_hashes
 from repro.serving.scheduler import PagedScheduler, Request
@@ -201,14 +200,11 @@ def _shared_prompts(page=8):
             common + list(range(409, 409 + page))]
 
 
-@pytest.mark.parametrize("kv_bits", [16, 8])
-def test_engine_cache_hits_bitexact(kv_bits):
-    cfg = reduced(get_arch("pangu_1b"))
-    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+def test_engine_cache_hits_bitexact(cfg_params, kv_bits):
+    cfg, params = cfg_params
     prompts = _shared_prompts()
-    mk = dict(kv_bits=kv_bits, page_size=8, max_batch=3, max_seq_len=64)
-    want = ContinuousBatchingEngine(params, cfg, **mk).run(prompts, max_new=8)
-    eng = ContinuousBatchingEngine(params, cfg, prefix_cache=True, **mk)
+    want = make_engine(params, cfg, kv_bits=kv_bits).run(prompts, max_new=8)
+    eng = make_engine(params, cfg, kv_bits=kv_bits, prefix_cache=True)
     cold = eng.run(prompts, max_new=8)
     warm = eng.run(prompts, max_new=8)
     assert cold.tokens == want.tokens         # cold pass: no hits, no drift
@@ -221,15 +217,14 @@ def test_engine_cache_hits_bitexact(kv_bits):
     assert stats["hit_rate"] > 0.4 and stats["cached_pages"] > 0
 
 
-def test_warm_hits_reuse_identical_quantized_pages():
-    """The pages a warm request maps are the exact int8 codes + scales the
-    cold request wrote — shared pages are never requantized or rewritten."""
-    cfg = reduced(get_arch("pangu_1b"))
-    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+@pytest.mark.parametrize("kv_bits", QUANT_KV_BITS)
+def test_warm_hits_reuse_identical_quantized_pages(cfg_params, kv_bits):
+    """The pages a warm request maps are the exact quantized codes + scales
+    the cold request wrote — int8 bytes and packed int4 nibbles alike are
+    never requantized or rewritten on a hit."""
+    cfg, params = cfg_params
     prompts = _shared_prompts()
-    eng = ContinuousBatchingEngine(params, cfg, kv_bits=8, page_size=8,
-                                   max_batch=3, max_seq_len=64,
-                                   prefix_cache=True)
+    eng = make_engine(params, cfg, kv_bits=kv_bits, prefix_cache=True)
     eng.run(prompts, max_new=8)
     cached = sorted(eng.sched.cache._by_hash.values())
     assert cached
@@ -238,23 +233,21 @@ def test_warm_hits_reuse_identical_quantized_pages():
     after = jax.device_get(eng.pools)
     assert warm.prefix_hit_tokens > 0
     for blk in before:
-        for name in ("k", "v", "k_s", "v_s"):
+        for name in pool_leaves(kv_bits):
             np.testing.assert_array_equal(
                 before[blk][name][:, cached], after[blk][name][:, cached])
 
 
-def test_mid_prefill_preemption_with_shared_pages():
+def test_mid_prefill_preemption_with_shared_pages(cfg_params, kv_bits):
     """Tight pool + shared prefixes: preempting holders of shared pages
     (refcount drops, no double-free) and evicting cold cached pages still
     reproduces the roomy cache-off engine token-for-token."""
-    cfg = reduced(get_arch("pangu_1b"))
-    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    cfg, params = cfg_params
     prompts = _shared_prompts()
-    mk = dict(kv_bits=8, page_size=8, max_batch=3, max_seq_len=64)
-    roomy = ContinuousBatchingEngine(params, cfg, **mk)
+    roomy = make_engine(params, cfg, kv_bits=kv_bits)
     want = roomy.run(prompts, max_new=8)
-    tight = ContinuousBatchingEngine(params, cfg, n_pages=13,
-                                     prefix_cache=True, **mk)
+    tight = make_engine(params, cfg, kv_bits=kv_bits, n_pages=13,
+                        prefix_cache=True)
     got = tight.run(prompts, max_new=8)
     assert got.tokens == want.tokens
     assert got.evictions > 0                  # preemption actually happened

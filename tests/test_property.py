@@ -75,6 +75,52 @@ def test_pack_interleave_roundtrip(vals):
     np.testing.assert_array_equal(np.asarray(back), vals)
 
 
+@_settings
+@given(st.integers(1, 6), st.sampled_from([2, 4, 6, 10, 16, 32]),
+       st.data())
+def test_pack_lastdim_roundtrip(rows, d, data):
+    """The KV-page layout (grouped halves along the last axis) round-trips
+    every nibble value, including the -8 storage edge the narrow symmetric
+    quantizer never emits, for odd and even half-group sizes."""
+    vals = data.draw(hnp.arrays(np.int8, (rows, d),
+                                elements=st.integers(-8, 7)))
+    packed = qtypes.pack_int4_halves_lastdim(jnp.asarray(vals))
+    assert packed.shape == (rows, d // 2) and packed.dtype == jnp.uint8
+    back = qtypes.unpack_int4_halves_lastdim(packed)
+    assert back.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(back), vals)
+
+
+@_settings
+@given(st.sampled_from([(4, 2, 2), (3, 1, 8), (2, 5, 6)]), st.data())
+def test_pack_lastdim_roundtrip_nd(shape, data):
+    """Round-trip holds for >2-d arrays — pages are (page, nkv, hd)."""
+    vals = data.draw(hnp.arrays(np.int8, shape,
+                                elements=st.integers(-8, 7)))
+    back = qtypes.unpack_int4_halves_lastdim(
+        qtypes.pack_int4_halves_lastdim(jnp.asarray(vals)))
+    np.testing.assert_array_equal(np.asarray(back), vals)
+
+
+@_settings
+@given(floats((8, 16)))
+def test_int4_quant_pack_roundtrip_error_bounded(x):
+    """quantize -> pack -> unpack -> dequantize deviates from the input by
+    at most s/2 + eps per element: the narrow symmetric clip at +-qmax(4)
+    lands the absmax exactly on a code, so no element clips by more than
+    half a step."""
+    am = np.abs(x).max(axis=-1, keepdims=True)
+    s = np.maximum(np.asarray(qtypes.paper_scale(jnp.asarray(am), 4)), 1e-8)
+    q = np.clip(np.rint(x / s), qtypes.qmin(4), qtypes.qmax(4)).astype(
+        np.int8)
+    back = qtypes.unpack_int4_halves_lastdim(
+        qtypes.pack_int4_halves_lastdim(jnp.asarray(q)))
+    deq = np.asarray(back, np.float32) * s
+    # relative eps: the absmax element sits exactly at s/2, so f32
+    # rounding of x/s can spill a few ulp past the bound
+    assert (np.abs(deq - x) <= s / 2 * (1 + 1e-4) + 1e-6).all()
+
+
 # -- smoothing invariants ---------------------------------------------------------
 
 @_settings

@@ -5,23 +5,15 @@ and engine-level guarantees — bf16 greedy bit-exactness vs vanilla decode
 mid-window, and the one-extra-program compile-count bound."""
 import types
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from conftest import QUANT_KV_BITS, make_engine
 
-from repro.configs import get_arch, reduced
 from repro.models import transformer
 from repro.serving import ContinuousBatchingEngine
 from repro.serving.draft import NgramDrafter
 from repro.serving import kv_pool
-
-
-@pytest.fixture(scope="module")
-def cfg_params():
-    cfg = reduced(get_arch("pangu_1b"))
-    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
-    return cfg, params
 
 
 # ---------------------------------------------------------------------------
@@ -79,7 +71,6 @@ def test_drafter_k_clamps():
 # kv_pool.truncate: rollback is bit-identical to never having speculated
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("kv_bits", [16, 8])
 def test_truncate_bit_identical_to_direct_write(kv_bits):
     cfg = types.SimpleNamespace(n_kv_heads=2, hd=4)
     page, c = 4, 5                                # k+1 window, unaligned
@@ -204,13 +195,15 @@ def test_engine_spec_budget_stops_mid_window(cfg_params):
     assert all(len(t) <= 5 for t in got.tokens)
 
 
-def test_engine_spec_int8_smoke(cfg_params):
-    """int8 pools re-round pages write-by-write, so batched verify is not
-    bit-exact with vanilla by design — the machinery must still produce
-    valid tokens, consistent counters, and the same compile-count bound."""
+@pytest.mark.parametrize("kv_bits", QUANT_KV_BITS)
+def test_engine_spec_quantized_smoke(cfg_params, kv_bits):
+    """Quantized pools (int8 and packed int4) re-round pages write-by-write,
+    so batched verify is not bit-exact with vanilla by design — the
+    machinery must still produce valid tokens, consistent counters, and the
+    same compile-count bound."""
     cfg, params = cfg_params
-    eng = ContinuousBatchingEngine(params, cfg, kv_bits=8, spec_decode=4,
-                                   spec_gate=0.5, **MK)
+    eng = make_engine(params, cfg, kv_bits=kv_bits, spec_decode=4,
+                      spec_gate=0.5, **MK)
     got = eng.run(_loopy_prompts(), max_new=32)
     assert all(len(t) <= 32 for t in got.tokens)
     assert all(0 <= tok < cfg.vocab for t in got.tokens for tok in t)
